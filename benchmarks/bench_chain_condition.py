@@ -1,0 +1,72 @@
+"""Paper section 4.3 + Appendix A: the nBL>S chain-selection condition.
+
+Sweeps (n, S) and measures simulated reduce latency for FORCED 1-D vs
+FORCED 2-D chains, verifying that the paper's analytic crossover
+(n B L = S) matches the simulator's empirical crossover.  On the paper's
+testbed (B=1.25 GB/s, L=125us), nBL>S at 1 MB means n > ~6.7 -- "if we
+are reducing a set of 1 MB objects, we use two-dimensional reduce when
+reducing more than 6 objects".
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import KB, MB, emit, fmt_size
+from repro.core import planner
+from repro.core.api import fresh_object_id
+from repro.core.simulation import Hoplite, SimCluster, ClusterSpec
+
+
+def reduce_forced(n: int, size: int, force: str) -> float:
+    spec = ClusterSpec(num_nodes=max(n, 16))
+    c = SimCluster(spec)
+    h = Hoplite(c)
+    # force the chain dimensionality by monkey-scoping use_two_dimensional
+    orig = planner.use_two_dimensional
+    planner_force = (lambda *_a, **_k: True) if force == "2d" else (lambda *_a, **_k: False)
+    import repro.core.simulation as sim_mod
+
+    sim_mod.use_two_dimensional = planner_force
+    try:
+        oids = {}
+        for i in range(n):
+            oid = fresh_object_id()
+            h.put(i, oid, size)
+            oids[oid] = i
+        c.sim.run()
+        t0 = c.sim.now
+        h.reduce(0, fresh_object_id("red"), oids, size)
+        c.sim.run()
+        return c.sim.now - t0
+    finally:
+        sim_mod.use_two_dimensional = orig
+
+
+def run() -> None:
+    link = planner.EC2_LINK
+    for size in (64 * KB, 1 * MB, 32 * MB):
+        # paper's analytic threshold
+        n_star = size / (link.bandwidth * link.latency)
+        crossover_seen = None
+        for n in (4, 6, 8, 12, 16):
+            t1 = reduce_forced(n, size, "1d")
+            t2 = reduce_forced(n, size, "2d")
+            better2d = t2 < t1
+            if better2d and crossover_seen is None:
+                crossover_seen = n
+            emit(
+                f"chain_{fmt_size(size)}_{n}n_1d", t1 * 1e6,
+                f"2d={t2*1e6:.0f}us nBL>S={'yes' if n * link.bandwidth * link.latency > size else 'no'}",
+            )
+        emit(
+            f"chain_crossover_{fmt_size(size)}",
+            (crossover_seen or 0) * 1.0,
+            f"analytic_n*={n_star:.1f} empirical_n={crossover_seen}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Figure 5: point-to-point round-trip latency.
+
+Hoplite vs Ray-style vs MPI-style on the simulated EC2 testbed.  The
+simulator runs the real control plane (directory, partial publication,
+pipelined memcopies); MPI is the closed-form 2(L + S/B) (it needs no
+directory).  Paper claims to reproduce: MPICH ~1.8x faster at 1KB,
+~1.3x at 1MB; Hoplite within ~0.2% of MPICH at 1GB and ~1.7x over Ray.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import PAPER_SIZES, emit, fmt_size
+from repro.core.api import fresh_object_id
+from repro.core.simulation import Hoplite, MPIStyle, RayStyle, SimCluster
+
+
+def rtt_hoplite(size: int) -> float:
+    c = SimCluster()
+    h = Hoplite(c)
+    a = fresh_object_id()
+    h.put(0, a, size)
+    done = h.get(1, a)
+    c.sim.run()
+    t_fwd = c.sim.now
+    b = fresh_object_id()
+    h.put(1, b, size)
+    h.get(0, b)
+    c.sim.run()
+    return c.sim.now
+
+
+def rtt_ray(size: int) -> float:
+    c = SimCluster()
+    r = RayStyle(c)
+    a = fresh_object_id()
+    r.put(0, a, size)
+    r.get(1, a)
+    c.sim.run()
+    b = fresh_object_id()
+    r.put(1, b, size)
+    r.get(0, b)
+    c.sim.run()
+    return c.sim.now
+
+
+def run() -> None:
+    m = MPIStyle(SimCluster())
+    for size in PAPER_SIZES:
+        th = rtt_hoplite(size)
+        tr = rtt_ray(size)
+        tm = m.p2p_rtt(size)
+        emit(f"p2p_rtt_hoplite_{fmt_size(size)}", th * 1e6,
+             f"vs_mpi={th/tm:.2f}x vs_ray={tr/th:.2f}x_faster")
+        emit(f"p2p_rtt_ray_{fmt_size(size)}", tr * 1e6, "")
+        emit(f"p2p_rtt_mpi_{fmt_size(size)}", tm * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: CSV emission + paper-matched constants."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Iterable
+
+KB = 1 << 10
+MB = 1 << 20
+GB = 1 << 30
+
+# Paper testbed (section 6): 16 x m5.4xlarge, 10 Gb/s, ~125 us p2p latency,
+# directory ops ~170 us.
+PAPER_SIZES = [1 * KB, 32 * KB, 1 * MB, 32 * MB, 1 * GB]
+PAPER_NODES = [4, 8, 16]
+
+
+def emit(name: str, value_us: float, derived: str = "") -> None:
+    """``name,us_per_call,derived`` CSV row (harness contract)."""
+    print(f"{name},{value_us:.1f},{derived}")
+
+
+def fmt_size(s: int) -> str:
+    if s >= GB:
+        return f"{s // GB}GB"
+    if s >= MB:
+        return f"{s // MB}MB"
+    return f"{s // KB}KB"
+
+
+class wallclock:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

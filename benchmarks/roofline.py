@@ -1,0 +1,130 @@
+"""§Roofline: compute/memory/collective terms from the dry-run artifacts.
+
+    compute   = HLO_FLOPs(device)            / 197e12  FLOP/s   (bf16 MXU)
+    memory    = HLO_bytes(device, post-fusion model) / 819e9 B/s (HBM)
+    collective= link_bytes(device)           / 50e9  B/s        (ICI)
+      (+ analytic DCN term for multi-pod train cells: the Hoplite pod
+       chain moves ~2x the per-device grad shard over 12.5 GB/s links)
+
+FLOPs/bytes come from the trip-count-aware HLO walker (launch/hlo_cost);
+XLA's own cost_analysis undercounts while-loops and is reported alongside
+for reference.  MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
+(prefill/decode) exposes remat + MoE dense-dispatch waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCHS
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 12.5e9
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops_per_device(rec) -> float:
+    cfg = ARCHS[rec["arch"]]
+    n_active = cfg.active_param_count()
+    chips = rec["num_devices"]
+    kind = rec["kind"]
+    if kind == "train":
+        import re
+
+        m = re.match(r".*", rec["shape"])
+        tokens = {"train_4k": 256 * 4096}[rec["shape"]]
+        return 6 * n_active * tokens / chips
+    if kind == "prefill":
+        tokens = {"prefill_32k": 32 * 32768}[rec["shape"]]
+        return 2 * n_active * tokens / chips
+    # decode: one token per sequence
+    batch = {"decode_32k": 128, "long_500k": 1}[rec["shape"]]
+    return 2 * n_active * batch / chips
+
+
+def roofline_row(rec) -> dict:
+    w = rec["walker"]
+    compute = w["flops"] / PEAK_FLOPS
+    memory = w["bytes"] / HBM_BW
+    coll = w["collective_link_bytes"] / ICI_BW
+    dcn = 0.0
+    if rec["mesh"] == "multi" and rec["kind"] == "train" and rec.get("pod_sync", "") != "gspmd":
+        cfg = ARCHS[rec["arch"]]
+        shard = cfg.param_count() * 4 / 256  # f32 grads, sharded per device
+        dcn = 2 * shard / DCN_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll + dcn}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / max(1.0, w["flops"])
+    total = max(terms.values())
+    roofline_frac = (mf / PEAK_FLOPS) / total if total else 0.0
+    suggestion = {
+        "compute": "raise useful-FLOPs ratio (remat policy, MoE dropping dispatch)",
+        "memory": "raise arithmetic intensity (bigger per-device microbatch, fuse, bf16 caches)",
+        "collective": "cut link bytes (reduce-scatter grads, 1-weight-gather/block, overlap, int8 pod chain)",
+    }[dominant]
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute, memory_s=memory, collective_s=coll + dcn,
+        dominant=dominant, model_flops=mf, useful_ratio=useful,
+        roofline_frac=roofline_frac, suggestion=suggestion,
+        temp_gib=rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    )
+
+
+def load_records(mesh: str = None, variant: str = ""):
+    """Baseline records only (variant dirs hold §Perf iterations)."""
+    dirs = [mesh] if mesh else ["single", "multi"]
+    if variant:
+        dirs = [f"{d}-{variant}" for d in dirs]
+    out = []
+    for d in dirs:
+        for path in sorted(glob.glob(os.path.join(ART, d, "*.json"))):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("ok"):
+                out.append(rec)
+    return out
+
+
+def run() -> None:
+    rows = [roofline_row(r) for r in load_records("single")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(
+            f"{name},{total*1e6:.1f},dom={r['dominant']} "
+            f"comp={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+            f"coll={r['collective_s']*1e3:.2f}ms useful={r['useful_ratio']:.2f} "
+            f"roofline_frac={r['roofline_frac']:.3f}"
+        )
+
+
+def markdown_table(mesh="single") -> str:
+    rows = [roofline_row(r) for r in load_records(mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | useful FLOPs ratio | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['temp_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Figures 5-9 run on the
+discrete-event simulator (the real Hoplite control plane over a modeled
+EC2 data plane); the chain-condition bench validates Appendix A; the TPU
+collective bench and the roofline report read compiled-HLO schedules.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_async,
+        bench_chain_condition,
+        bench_collectives,
+        bench_p2p,
+        bench_param_server,
+        bench_rl,
+        bench_tpu_collectives,
+        roofline,
+    )
+
+    sections = [
+        ("Figure 5: point-to-point", bench_p2p.run),
+        ("Figure 6: collective latency", bench_collectives.run),
+        ("Figure 7: asynchrony", bench_async.run),
+        ("Appendix A: chain condition", bench_chain_condition.run),
+        ("Figure 8: parameter server", bench_param_server.run),
+        ("Figure 9: RL throughput", bench_rl.run),
+        ("TPU collective schedules", bench_tpu_collectives.run),
+        ("Roofline (from dry-run artifacts)", roofline.run),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            fn()
+        except BaseException:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Hoplite public API types (paper Table 1).
+
+The Hoplite interface is intentionally minimal:
+
+    Buffer <- Get(object_id)
+    Put(object_id, buffer)
+    Delete(object_id)
+    Reduce(target_object_id, {source_object_id, ...}, op)
+
+Objects are immutable once complete.  The directory tracks *partial* and
+*complete* copies per node so that partial copies can act as senders
+(pipelining, paper section 4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Callable
+
+# Small objects (< 64 KB) are inlined in the object directory itself
+# (paper section 4.1, "Optimization for small objects").
+SMALL_OBJECT_THRESHOLD = 64 * 1024
+
+# Default pipelining granularity (paper section 6.1 uses 4 KB; on TPU we
+# use much larger chunks, see core/collectives.py).
+DEFAULT_CHUNK_SIZE = 4 * 1024
+
+_id_counter = itertools.count()
+
+
+def fresh_object_id(prefix: str = "obj") -> str:
+    """Generate a unique ObjectID string (paper: 'unique string')."""
+    return f"{prefix}-{next(_id_counter)}"
+
+
+class Progress(enum.Enum):
+    """Single progress bit per location (paper section 4.1)."""
+
+    PARTIAL = 0
+    COMPLETE = 1
+
+
+class ReduceOp:
+    """A commutative + associative reduction (paper: sum, min, max)."""
+
+    def __init__(self, name: str, fn: Callable, identity=None):
+        self.name = name
+        self.fn = fn
+        self.identity = identity
+
+    def __call__(self, a, b):
+        return self.fn(a, b)
+
+    def __repr__(self):
+        return f"ReduceOp({self.name})"
+
+
+def _sum(a, b):
+    return a + b
+
+
+SUM = ReduceOp("sum", _sum)
+MIN = ReduceOp("min", lambda a, b: __import__("numpy").minimum(a, b))
+MAX = ReduceOp("max", lambda a, b: __import__("numpy").maximum(a, b))
+
+
+@dataclasses.dataclass
+class Location:
+    """One entry in the directory's location list for an object."""
+
+    node: int
+    progress: Progress
+    # Monotonic count of bytes present at `node` for this object; used by
+    # the simulator/threaded store to enforce that a partial copy never
+    # forwards bytes it has not yet received.
+    bytes_present: int = 0
+
+
+class ObjectLost(RuntimeError):
+    """All copies of an object disappeared (node failures)."""
+
+
+class ObjectAlreadyExists(ValueError):
+    """Put() called twice with non-identical buffers for the same ID."""

@@ -1,0 +1,470 @@
+"""TPU-native Hoplite collectives: chunk-pipelined chain/tree schedules.
+
+This is the hardware adaptation of the paper's data plane (DESIGN.md §2).
+On TPU the only inter-chip data path is an XLA collective, so Hoplite's
+transfer schedules are expressed as explicit ``jax.lax.ppermute`` programs
+inside ``shard_map``:
+
+  * ``chain_allreduce``    -- the paper's allreduce (reduce chain into the
+    last rank, then broadcast chain back), *fused*: chunk k starts its
+    broadcast leg while chunk k+1 is still reducing.  This is precisely
+    section 4.2's "reduce followed by broadcast ... streamed end to end",
+    and with C chunks costs (C + 2n - 3) steps of S/C bytes each
+    ~= 2 S/B + 2 n (L + (S/C)/B)  -- bandwidth-competitive with ring
+    allreduce while keeping the paper's reduce->broadcast structure.
+  * ``chain_reduce`` / ``chain_broadcast`` -- the unfused building blocks
+    (Get/Reduce composition), also chunk-pipelined.
+  * ``two_level_allreduce`` -- the paper's 2-D sqrt(n) chain: reduce within
+    groups, chain across group roots, broadcast back.  Selected by the
+    paper's condition n*B*L > S evaluated with ICI/DCN constants.
+  * ``binomial_broadcast`` -- the MPI-style static tree, kept as a baseline
+    (and used where a true one-to-all of a *replicated-source* is needed).
+  * ``ring_reduce_scatter`` / ``ring_all_gather`` -- beyond-paper,
+    bandwidth-optimal forms used by the optimized gradient sync path.
+  * ``hoplite_psum`` -- the dispatcher: tiny tensors go straight to
+    ``lax.psum`` (the TPU analogue of the <64 KB directory-inline fast
+    path); large tensors pick 1-D vs 2-D chains via nBL > S.
+
+All functions assume they run inside ``shard_map`` with ``axis_name``
+available, and operate on the *local* shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import planner
+from repro.core.planner import LinkSpec, ICI_LINK, DCN_LINK
+
+# TPU analogue of the paper's 64 KB small-object threshold: below this a
+# plain psum beats any software-pipelined schedule (latency-bound regime).
+SMALL_TENSOR_BYTES = 256 * 1024
+
+DEFAULT_NUM_CHUNKS = 16
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _to_chunks(x: jax.Array, num_chunks: int):
+    """Flatten and pad x to (num_chunks, chunk_elems)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    chunk = -(-n // num_chunks)
+    pad = chunk * num_chunks - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(num_chunks, chunk), n
+
+
+def _from_chunks(chunks: jax.Array, orig_elems: int, shape, dtype):
+    return chunks.reshape(-1)[:orig_elems].reshape(shape).astype(dtype)
+
+
+def _dyn_chunk(chunks: jax.Array, k):
+    k = jnp.clip(k, 0, chunks.shape[0] - 1)
+    return lax.dynamic_index_in_dim(chunks, k, axis=0, keepdims=False)
+
+
+def _set_chunk(chunks: jax.Array, k, val):
+    k = jnp.clip(k, 0, chunks.shape[0] - 1)
+    return lax.dynamic_update_index_in_dim(chunks, val, k, axis=0)
+
+
+def _add_chunk(chunks: jax.Array, k, val):
+    cur = _dyn_chunk(chunks, k)
+    return _set_chunk(chunks, k, cur + val)
+
+
+# ---------------------------------------------------------------------------
+# fused chain allreduce (the paper's reduce->broadcast, streamed)
+# ---------------------------------------------------------------------------
+
+
+def pairwise_exchange_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """n == 2 degenerate chain: one bidirectional exchange.
+
+    For two pods the 1-D chain IS a pairwise exchange (send-all /
+    receive-all on full-duplex links), and crucially it needs NO flat
+    reshape -- under partial-manual shard_map a reshape of a tensor that
+    is still sharded over the auto (data/model) axes forces GSPMD to
+    replicate it (observed: 600 GiB/device temp on the qwen2-vl-72b
+    multi-pod train cell, EXPERIMENTS §Perf iteration 5)."""
+    peer = lax.ppermute(x, axis_name, [(0, 1), (1, 0)])
+    return x + peer
+
+
+def chain_allreduce(
+    x: jax.Array,
+    axis_name: str,
+    num_chunks: int = DEFAULT_NUM_CHUNKS,
+) -> jax.Array:
+    """Hoplite allreduce: pipelined chain-reduce into rank n-1 overlapped
+    with a pipelined chain-broadcast back toward rank 0.
+
+    Chunk k is fully reduced at rank n-1 at step k+n-2 and immediately
+    begins its broadcast leg at step k+n-1 -- the broadcast of chunk k
+    overlaps the reduction of chunks k+1..  (paper sections 4.2/4.3).
+    """
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    if n == 2:
+        return pairwise_exchange_allreduce(x, axis_name)
+    idx = lax.axis_index(axis_name)
+    C = num_chunks
+    acc, orig = _to_chunks(x, C)  # partial-sum buffer (reduce direction)
+    fin = jnp.zeros_like(acc)  # final-value buffer (broadcast direction)
+    perm_up = [(i, i + 1) for i in range(n - 1)]
+    perm_down = [(i + 1, i) for i in range(n - 1)]
+    total_steps = C + 2 * n - 3
+
+    def body(t, carry):
+        acc, fin = carry
+        # ---- reduce leg: i sends acc[t-i] to i+1, which accumulates ----
+        k_send = t - idx
+        r_payload = _dyn_chunk(acc, k_send)
+        r_recv = lax.ppermute(r_payload, axis_name, perm_up)
+        k_recv = t - idx + 1
+        r_ok = (idx >= 1) & (k_recv >= 0) & (k_recv < C)
+        acc = _add_chunk(acc, k_recv, jnp.where(r_ok, r_recv, 0).astype(acc.dtype))
+        # ---- broadcast leg: i sends final[t - 2(n-1) + i] to i-1 ----
+        k_bsend = t - 2 * (n - 1) + idx
+        src = jnp.where(idx == n - 1, _dyn_chunk(acc, k_bsend), _dyn_chunk(fin, k_bsend))
+        b_recv = lax.ppermute(src, axis_name, perm_down)
+        k_brecv = t - 2 * (n - 1) + idx + 1
+        b_ok = (idx <= n - 2) & (k_brecv >= 0) & (k_brecv < C)
+        cur = _dyn_chunk(fin, k_brecv)
+        fin = _set_chunk(fin, k_brecv, jnp.where(b_ok, b_recv, cur))
+        return acc, fin
+
+    acc, fin = lax.fori_loop(0, total_steps, body, (acc, fin))
+    out = jnp.where(idx == n - 1, acc, fin)
+    return _from_chunks(out, orig, x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# unfused building blocks
+# ---------------------------------------------------------------------------
+
+
+def chain_reduce(
+    x: jax.Array, axis_name: str, num_chunks: int = DEFAULT_NUM_CHUNKS
+) -> jax.Array:
+    """Pipelined 1-D chain reduce into rank n-1 (others return partials)."""
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    C = num_chunks
+    acc, orig = _to_chunks(x, C)
+    perm_up = [(i, i + 1) for i in range(n - 1)]
+
+    def body(t, acc):
+        k_send = t - idx
+        recv = lax.ppermute(_dyn_chunk(acc, k_send), axis_name, perm_up)
+        k_recv = t - idx + 1
+        ok = (idx >= 1) & (k_recv >= 0) & (k_recv < C)
+        return _add_chunk(acc, k_recv, jnp.where(ok, recv, 0).astype(acc.dtype))
+
+    acc = lax.fori_loop(0, C + n - 2, body, acc)
+    return _from_chunks(acc, orig, x.shape, x.dtype)
+
+
+def chain_broadcast(
+    x: jax.Array, axis_name: str, num_chunks: int = DEFAULT_NUM_CHUNKS, root: str = "last"
+) -> jax.Array:
+    """Pipelined chain broadcast from rank n-1 (or 0) through every rank."""
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    C = num_chunks
+    buf, orig = _to_chunks(x, C)
+    if root == "last":
+        perm = [(i + 1, i) for i in range(n - 1)]
+        pos = (n - 1) - idx  # hops from root
+    else:
+        perm = [(i, i + 1) for i in range(n - 1)]
+        pos = idx
+
+    def body(t, buf):
+        k_send = t - pos
+        recv = lax.ppermute(_dyn_chunk(buf, k_send), axis_name, perm)
+        k_recv = t - pos + 1
+        ok = (pos >= 1) & (k_recv >= 0) & (k_recv < C)
+        cur = _dyn_chunk(buf, k_recv)
+        return _set_chunk(buf, k_recv, jnp.where(ok, recv, cur))
+
+    buf = lax.fori_loop(0, C + n - 2, body, buf)
+    return _from_chunks(buf, orig, x.shape, x.dtype)
+
+
+def binomial_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """MPI-style static binomial tree broadcast (log2 n rounds, store &
+    forward).  Baseline for EXPERIMENTS §Perf comparisons."""
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    # rotate so root behaves as rank 0
+    vidx = (idx - root) % n
+    rounds = max(1, math.ceil(math.log2(n)))
+    for r in range(rounds):
+        span = 1 << r
+        perm = [((i + root) % n, (i + span + root) % n) for i in range(span) if i + span < n]
+        recv = lax.ppermute(x, axis_name, perm)
+        is_recv = (vidx >= span) & (vidx < 2 * span)
+        x = jnp.where(is_recv, recv, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# two-level (2-D sqrt-n) chain allreduce
+# ---------------------------------------------------------------------------
+
+
+def two_level_allreduce(
+    x: jax.Array,
+    axis_name: str,
+    num_chunks: int = DEFAULT_NUM_CHUNKS,
+    group_size: Optional[int] = None,
+) -> jax.Array:
+    """The paper's 2-D chain: sqrt(n) chains of sqrt(n), then a chain over
+    the group roots, then broadcast back down both levels.
+
+    Implemented as masked pipelined chain passes: within-group chains all
+    run concurrently (disjoint ppermute edges), then the root chain runs,
+    then the two broadcast legs mirror back.
+    """
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    g = group_size or max(2, math.isqrt(n))
+    while n % g != 0:  # need even groups for the static perm
+        g += 1
+    m = n // g  # number of groups... groups of size g
+    idx = lax.axis_index(axis_name)
+    C = num_chunks
+    buf, orig = _to_chunks(x, C)
+    in_group_pos = idx % g
+    group_id = idx // g
+
+    # ---- phase 1: pipelined chain reduce within each group -> local root
+    perm_in = [
+        (q * g + j, q * g + j + 1) for q in range(m) for j in range(g - 1)
+    ]
+
+    def red_body_in(t, b):
+        k_send = t - in_group_pos
+        recv = lax.ppermute(_dyn_chunk(b, k_send), axis_name, perm_in)
+        k_recv = t - in_group_pos + 1
+        ok = (in_group_pos >= 1) & (k_recv >= 0) & (k_recv < C)
+        return _add_chunk(b, k_recv, jnp.where(ok, recv, 0).astype(b.dtype))
+
+    buf = lax.fori_loop(0, C + g - 2, red_body_in, buf)
+
+    # ---- phase 2: chain reduce across group roots (ranks q*g + g-1)
+    perm_root = [(q * g + g - 1, (q + 1) * g + g - 1) for q in range(m - 1)]
+    is_root = in_group_pos == g - 1
+
+    def red_body_root(t, b):
+        k_send = t - group_id
+        recv = lax.ppermute(_dyn_chunk(b, k_send), axis_name, perm_root)
+        k_recv = t - group_id + 1
+        ok = is_root & (group_id >= 1) & (k_recv >= 0) & (k_recv < C)
+        return _add_chunk(b, k_recv, jnp.where(ok, recv, 0).astype(b.dtype))
+
+    buf = lax.fori_loop(0, C + m - 2, red_body_root, buf)
+
+    # ---- phase 3: broadcast back across roots (reverse chain)
+    perm_root_down = [((q + 1) * g + g - 1, q * g + g - 1) for q in range(m - 1)]
+    root_pos_down = (m - 1) - group_id
+
+    def bc_body_root(t, b):
+        k_send = t - root_pos_down
+        recv = lax.ppermute(_dyn_chunk(b, k_send), axis_name, perm_root_down)
+        k_recv = t - root_pos_down + 1
+        ok = is_root & (group_id <= m - 2) & (k_recv >= 0) & (k_recv < C)
+        cur = _dyn_chunk(b, k_recv)
+        return _set_chunk(b, k_recv, jnp.where(ok, recv, cur))
+
+    buf = lax.fori_loop(0, C + m - 2, bc_body_root, buf)
+
+    # ---- phase 4: broadcast down within each group (reverse chain)
+    perm_in_down = [
+        (q * g + j + 1, q * g + j) for q in range(m) for j in range(g - 1)
+    ]
+    pos_down = (g - 1) - in_group_pos
+
+    def bc_body_in(t, b):
+        k_send = t - pos_down
+        recv = lax.ppermute(_dyn_chunk(b, k_send), axis_name, perm_in_down)
+        k_recv = t - pos_down + 1
+        ok = (in_group_pos <= g - 2) & (k_recv >= 0) & (k_recv < C)
+        cur = _dyn_chunk(b, k_recv)
+        return _set_chunk(b, k_recv, jnp.where(ok, recv, cur))
+
+    buf = lax.fori_loop(0, C + g - 2, bc_body_in, buf)
+    return _from_chunks(buf, orig, x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: bandwidth-optimal ring forms
+# ---------------------------------------------------------------------------
+
+
+def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
+    """Ring reduce-scatter: returns this rank's 1/n sum shard (flattened).
+
+    The paper notes its API cannot express ring-allreduce (section 7); we
+    implement it anyway as the beyond-paper optimized gradient path."""
+    n = lax.psum(1, axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shards = flat.reshape(n, -1)
+    if n == 1:
+        return shards[0]
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(t, carry):
+        send_k = (idx - t) % n
+        payload = _dyn_chunk(carry, send_k)
+        recv = lax.ppermute(payload, axis_name, perm)
+        recv_k = (idx - t - 1) % n
+        return _add_chunk(carry, recv_k, recv)
+
+    shards = lax.fori_loop(0, n - 1, body, shards)
+    return _dyn_chunk(shards, (idx + 1) % n)
+
+
+def ring_all_gather(shard: jax.Array, axis_name: str) -> jax.Array:
+    """Ring all-gather of equal shards -> (n, shard_elems)."""
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return shard[None]
+    idx = lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + shard.shape, shard.dtype)
+    out = _set_chunk(out, (idx + 1) % n, shard)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(t, carry):
+        send_k = (idx + 1 - t) % n
+        payload = _dyn_chunk(carry, send_k)
+        recv = lax.ppermute(payload, axis_name, perm)
+        recv_k = (idx - t) % n
+        return _set_chunk(carry, recv_k, recv)
+
+    return lax.fori_loop(0, n - 1, body, out)
+
+
+def rs_ag_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """reduce-scatter + all-gather allreduce (bandwidth-optimal)."""
+    n = lax.psum(1, axis_name)
+    if n == 1:
+        return x
+    shard = ring_reduce_scatter(x, axis_name)
+    gathered = ring_all_gather(shard, axis_name)
+    # ring_all_gather seeds rank i's shard at its logical slot (i+1)%n and
+    # rotates consistently, so `gathered` is already in logical chunk order.
+    flat = gathered.reshape(-1)
+    orig = x.size
+    return flat[:orig].reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher: the nBL>S rule with TPU constants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveConfig:
+    """Selection policy for one mesh axis (paper section 4.3 + App. A)."""
+
+    link: LinkSpec = ICI_LINK
+    num_chunks: int = DEFAULT_NUM_CHUNKS
+    small_bytes: int = SMALL_TENSOR_BYTES
+    # per-ppermute-step software overhead (launch + sync), seconds; this is
+    # the 'L' that actually matters for chunked schedules on TPU.
+    step_overhead: float = 2e-6
+
+    def effective_latency(self) -> float:
+        return self.link.latency + self.step_overhead
+
+    def choose(self, axis_size: int, nbytes: int) -> str:
+        if nbytes < self.small_bytes or axis_size <= 2:
+            return "psum"
+        eff = LinkSpec(self.link.bandwidth, self.effective_latency())
+        if planner.use_two_dimensional(axis_size, eff, nbytes):
+            return "chain2d"
+        return "chain"
+
+
+ICI_CONFIG = CollectiveConfig(link=ICI_LINK)
+DCN_CONFIG = CollectiveConfig(link=DCN_LINK, num_chunks=32, step_overhead=10e-6)
+
+
+def hoplite_psum(
+    x: jax.Array,
+    axis_name: str,
+    config: CollectiveConfig = ICI_CONFIG,
+    axis_size: Optional[int] = None,
+) -> jax.Array:
+    """Hoplite-scheduled allreduce over one named axis.
+
+    Dispatch (static, at trace time):
+      * small tensor          -> lax.psum   (directory-inline analogue)
+      * n*B*L <= S            -> fused 1-D chain allreduce
+      * n*B*L  > S            -> 2-D sqrt(n) chain allreduce
+    """
+    n = axis_size if axis_size is not None else lax.psum(1, axis_name)
+    method = config.choose(n, x.size * x.dtype.itemsize)
+    if method == "psum":
+        return lax.psum(x, axis_name)
+    if method == "chain2d":
+        return two_level_allreduce(x, axis_name, config.num_chunks)
+    return chain_allreduce(x, axis_name, config.num_chunks)
+
+
+def grad_sync(
+    grads,
+    axis_name: str,
+    method: str = "hoplite",
+    config: CollectiveConfig = ICI_CONFIG,
+    mean: bool = True,
+):
+    """Synchronize a gradient pytree over ``axis_name``.
+
+    methods: 'psum' (XLA baseline), 'hoplite' (paper-faithful dispatch),
+    'chain' / 'chain2d' (forced), 'rs_ag' (beyond-paper ring).
+    """
+    n = lax.psum(1, axis_name)
+
+    def one(g):
+        if method == "psum":
+            out = lax.psum(g, axis_name)
+        elif method == "hoplite":
+            out = hoplite_psum(g, axis_name, config)
+        elif method == "chain":
+            out = chain_allreduce(g, axis_name, config.num_chunks)
+        elif method == "chain2d":
+            out = two_level_allreduce(g, axis_name, config.num_chunks)
+        elif method == "rs_ag":
+            out = rs_ag_allreduce(g, axis_name)
+        else:
+            raise ValueError(f"unknown grad_sync method {method!r}")
+        return out / n if mean else out
+
+    return jax.tree_util.tree_map(one, grads)

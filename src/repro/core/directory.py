@@ -1,0 +1,241 @@
+"""Object directory service (paper section 4.1).
+
+A sharded hash table mapping ObjectID -> {size, locations}.  Each location
+carries a single progress bit (PARTIAL / COMPLETE).  The directory:
+
+  * answers synchronous and asynchronous ("publish future locations to the
+    client") location queries,
+  * returns exactly ONE location per query, preferring COMPLETE copies,
+  * supports *checkout* semantics: the receiver may ask for the returned
+    location to be removed while the transfer is in flight, and adds it
+    back afterwards -- this caps every node at one outbound transfer and is
+    what makes the receiver-driven broadcast tree emerge (section 4.3),
+  * inlines small objects (< 64 KB) directly (section 4.1),
+  * can be replicated for fault tolerance (section 7); replicas apply the
+    same update stream and a failover promotes a replica to primary.
+
+This is a *control plane* component: it is used verbatim by both the
+discrete-event simulator and the threaded in-process cluster.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, List, Optional
+
+from repro.core.api import (
+    Location,
+    ObjectLost,
+    Progress,
+    SMALL_OBJECT_THRESHOLD,
+)
+
+
+class _Shard:
+    """One directory shard: ObjectID -> entry."""
+
+    def __init__(self):
+        self.size: Dict[str, int] = {}
+        self.locations: Dict[str, Dict[int, Location]] = collections.defaultdict(dict)
+        self.inline: Dict[str, object] = {}  # small-object fast path
+        self.subscribers: Dict[str, List[Callable]] = collections.defaultdict(list)
+        # Locations temporarily checked out by an in-flight transfer.
+        self.checked_out: Dict[str, Dict[int, Location]] = collections.defaultdict(dict)
+
+
+class ObjectDirectory:
+    """Sharded object directory service."""
+
+    def __init__(self, num_shards: int = 8, seed: int = 0):
+        self.num_shards = num_shards
+        self.shards = [_Shard() for _ in range(num_shards)]
+        self._tick = 0  # deterministic tie-break counter
+
+    # -- internal ----------------------------------------------------------
+
+    def _shard(self, object_id: str) -> _Shard:
+        return self.shards[hash(object_id) % self.num_shards]
+
+    def _notify(self, shard: _Shard, object_id: str) -> None:
+        for cb in list(shard.subscribers.get(object_id, ())):
+            cb(object_id)
+
+    # -- publishing --------------------------------------------------------
+
+    def publish_partial(self, object_id: str, node: int, size: Optional[int] = None) -> None:
+        """A node is *about to* hold this object (Put started / transfer
+        started).  Partial copies can act as senders (section 4.2)."""
+        shard = self._shard(object_id)
+        if size is not None:
+            shard.size[object_id] = size
+        loc = shard.locations[object_id].get(node)
+        if loc is None or loc.progress is Progress.PARTIAL:
+            shard.locations[object_id][node] = Location(node, Progress.PARTIAL, 0)
+        self._notify(shard, object_id)
+
+    def publish_complete(self, object_id: str, node: int, size: int) -> None:
+        shard = self._shard(object_id)
+        shard.size[object_id] = size
+        shard.locations[object_id][node] = Location(node, Progress.COMPLETE, size)
+        self._notify(shard, object_id)
+
+    def publish_inline(self, object_id: str, value, size: int) -> None:
+        """Small-object fast path: cache the object in the directory."""
+        assert size < SMALL_OBJECT_THRESHOLD
+        shard = self._shard(object_id)
+        shard.inline[object_id] = value
+        shard.size[object_id] = size
+        self._notify(shard, object_id)
+
+    def update_progress(self, object_id: str, node: int, bytes_present: int) -> None:
+        shard = self._shard(object_id)
+        loc = shard.locations[object_id].get(node)
+        if loc is not None:
+            loc.bytes_present = bytes_present
+
+    # -- queries -----------------------------------------------------------
+
+    def size_of(self, object_id: str) -> Optional[int]:
+        return self._shard(object_id).size.get(object_id)
+
+    def get_inline(self, object_id: str):
+        return self._shard(object_id).inline.get(object_id)
+
+    def locations(self, object_id: str) -> List[Location]:
+        shard = self._shard(object_id)
+        return list(shard.locations[object_id].values())
+
+    def checkout_location(
+        self, object_id: str, *, remove: bool = True, exclude: Optional[int] = None
+    ) -> Optional[Location]:
+        """Return ONE location, preferring complete copies (section 4.3).
+
+        With ``remove=True`` the location is withheld from subsequent
+        queries until :meth:`return_location` is called -- this is the
+        mechanism that caps each node at one concurrent outbound transfer
+        and turns late receivers into a dynamically-built broadcast tree.
+        """
+        shard = self._shard(object_id)
+        locs = [
+            l
+            for l in shard.locations[object_id].values()
+            if exclude is None or l.node != exclude
+        ]
+        if not locs:
+            return None
+        # Prefer complete copies; break ties deterministically by a rotating
+        # counter so repeated broadcasts spread load.
+        self._tick += 1
+        locs.sort(key=lambda l: (l.progress is not Progress.COMPLETE, (l.node + self._tick) % 1000003))
+        chosen = locs[0]
+        if remove:
+            del shard.locations[object_id][chosen.node]
+            shard.checked_out[object_id][chosen.node] = chosen
+        return chosen
+
+    def return_location(self, object_id: str, node: int) -> None:
+        """Add a checked-out sender back (transfer finished)."""
+        shard = self._shard(object_id)
+        loc = shard.checked_out[object_id].pop(node, None)
+        if loc is not None and node not in shard.locations[object_id]:
+            shard.locations[object_id][node] = loc
+            self._notify(shard, object_id)
+
+    # -- async queries -----------------------------------------------------
+
+    def subscribe(self, object_id: str, callback: Callable) -> None:
+        """Asynchronous location query: callback fires on every new
+        location publication for ``object_id`` (section 4.1)."""
+        shard = self._shard(object_id)
+        shard.subscribers[object_id].append(callback)
+        if shard.locations[object_id] or object_id in shard.inline:
+            callback(object_id)
+
+    def unsubscribe(self, object_id: str, callback: Callable) -> None:
+        shard = self._shard(object_id)
+        try:
+            shard.subscribers[object_id].remove(callback)
+        except ValueError:
+            pass
+
+    # -- deletion / failures -------------------------------------------------
+
+    def delete(self, object_id: str) -> List[int]:
+        """Remove all copies; returns the nodes that held one."""
+        shard = self._shard(object_id)
+        nodes = list(shard.locations[object_id].keys()) + list(
+            shard.checked_out[object_id].keys()
+        )
+        shard.locations.pop(object_id, None)
+        shard.checked_out.pop(object_id, None)
+        shard.inline.pop(object_id, None)
+        shard.size.pop(object_id, None)
+        shard.subscribers.pop(object_id, None)
+        return nodes
+
+    def fail_node(self, node: int) -> List[str]:
+        """Drop every location on a failed node; returns object IDs that
+        lost their LAST copy (the framework must recover those, section 7)."""
+        orphaned = []
+        for shard in self.shards:
+            for object_id in list(shard.locations.keys()):
+                shard.locations[object_id].pop(node, None)
+                shard.checked_out[object_id].pop(node, None)
+                if not shard.locations[object_id] and not shard.checked_out[object_id]:
+                    if object_id not in shard.inline:
+                        orphaned.append(object_id)
+        return orphaned
+
+    def assert_available(self, object_id: str) -> None:
+        shard = self._shard(object_id)
+        if (
+            not shard.locations[object_id]
+            and not shard.checked_out[object_id]
+            and object_id not in shard.inline
+        ):
+            raise ObjectLost(object_id)
+
+
+class ReplicatedDirectory(ObjectDirectory):
+    """Primary + replica directory (paper section 7: 'the object directory
+    service can easily be replicated for durability').
+
+    Every mutation is applied to the primary and mirrored to replicas.
+    ``fail_primary()`` promotes replica 0.  Queries always hit the primary.
+    """
+
+    def __init__(self, num_shards: int = 8, num_replicas: int = 1):
+        super().__init__(num_shards)
+        self.replicas = [ObjectDirectory(num_shards) for _ in range(num_replicas)]
+
+    def _mirror(self, method: str, *args, **kwargs):
+        for r in self.replicas:
+            getattr(r, method)(*args, **kwargs)
+
+    def publish_partial(self, object_id, node, size=None):
+        super().publish_partial(object_id, node, size)
+        self._mirror("publish_partial", object_id, node, size)
+
+    def publish_complete(self, object_id, node, size):
+        super().publish_complete(object_id, node, size)
+        self._mirror("publish_complete", object_id, node, size)
+
+    def publish_inline(self, object_id, value, size):
+        super().publish_inline(object_id, value, size)
+        self._mirror("publish_inline", object_id, value, size)
+
+    def delete(self, object_id):
+        nodes = super().delete(object_id)
+        self._mirror("delete", object_id)
+        return nodes
+
+    def fail_node(self, node):
+        orphaned = super().fail_node(node)
+        self._mirror("fail_node", node)
+        return orphaned
+
+    def fail_primary(self) -> "ObjectDirectory":
+        """Simulate primary loss: promote replica 0 to primary state."""
+        promoted = self.replicas[0]
+        self.shards = promoted.shards
+        return self

@@ -1,0 +1,413 @@
+"""Threaded in-process Hoplite cluster moving REAL bytes.
+
+Where core/simulation.py validates *timing* with symbolic buffers, this
+module validates *correctness*: N "nodes" (thread domains) in one process,
+real numpy payloads, chunk-granularity streaming with the same directory /
+checkout / chain protocols.  It backs the task runtime (repro/runtime) and
+the property-based tests (reduce == exact sum under any arrival order,
+broadcast delivers identical bytes through relay chains, node failure
+recovery re-fetches from surviving copies).
+
+Transfers stream chunk-by-chunk gated on the *source's* progress, so a
+partial copy genuinely forwards data it has only partially received --
+the real pipelining mechanism, not a mock of it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.api import (
+    DEFAULT_CHUNK_SIZE,
+    ObjectLost,
+    Progress,
+    ReduceOp,
+    SMALL_OBJECT_THRESHOLD,
+    SUM,
+)
+from repro.core.directory import ObjectDirectory, ReplicatedDirectory
+from repro.core.planner import LinkSpec, EC2_LINK, use_two_dimensional
+from repro.core.scheduler import ChainState, partition_groups
+from repro.core.store import ChunkedBuffer, NodeStore
+
+
+class DeadNode(RuntimeError):
+    pass
+
+
+class LocalCluster:
+    """An in-process Hoplite deployment."""
+
+    def __init__(
+        self,
+        num_nodes: int,
+        *,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        link: LinkSpec = EC2_LINK,
+        directory_replicas: int = 1,
+        pace: float = 0.0,  # optional seconds of sleep per chunk (tests)
+        store_capacity: Optional[int] = None,
+    ):
+        self.num_nodes = num_nodes
+        self.chunk_size = chunk_size
+        self.link = link
+        self.pace = pace
+        self.directory = ReplicatedDirectory(num_replicas=directory_replicas)
+        self.stores = [NodeStore(i, store_capacity) for i in range(num_nodes)]
+        self.meta: Dict[str, Tuple[np.dtype, tuple]] = {}
+        self.dead: set = set()
+        self.lock = threading.RLock()
+        self.cv = threading.Condition(self.lock)
+        self._threads: List[threading.Thread] = []
+        # instrumentation
+        self.bytes_sent_per_node = [0] * num_nodes
+        self.transfers: List[Tuple[int, int, str]] = []  # (src, dst, oid)
+
+    # -- helpers -------------------------------------------------------------
+
+    def _spawn(self, fn, *args) -> threading.Thread:
+        t = threading.Thread(target=fn, args=args, daemon=True)
+        t.start()
+        self._threads.append(t)
+        return t
+
+    def _notify(self):
+        with self.cv:
+            self.cv.notify_all()
+
+    def _check_alive(self, node: int):
+        if node in self.dead:
+            raise DeadNode(str(node))
+
+    def join(self, timeout: float = 30.0):
+        deadline = time.time() + timeout
+        for t in self._threads:
+            t.join(max(0.0, deadline - time.time()))
+
+    # -- Put -------------------------------------------------------------------
+
+    def put(self, node: int, object_id: str, value: np.ndarray) -> str:
+        """Synchronous Put (the executor->store copy is instant in-process;
+        the *pipelining* this copy needs on a real deployment is exercised
+        in the simulator)."""
+        self._check_alive(node)
+        value = np.asarray(value)
+        with self.lock:
+            self.meta[object_id] = (value.dtype, value.shape)
+            buf = self.stores[node].put_array(object_id, value, self.chunk_size)
+            if buf.size < SMALL_OBJECT_THRESHOLD:
+                self.directory.publish_inline(object_id, value.copy(), buf.size)
+            self.directory.publish_complete(object_id, node, buf.size)
+        self._notify()
+        return object_id
+
+    # -- Get -------------------------------------------------------------------
+
+    def get(self, node: int, object_id: str, timeout: float = 30.0) -> np.ndarray:
+        """Blocking receiver-driven Get with relay through partial copies."""
+        self._check_alive(node)
+        deadline = time.time() + timeout
+        with self.lock:
+            inline = self.directory.get_inline(object_id)
+            if inline is not None:
+                return np.array(inline)
+            local = self.stores[node].get(object_id)
+            if local is not None and local.complete:
+                dtype, shape = self.meta[object_id]
+                return local.to_array(dtype, shape).copy()
+        buf = self._fetch(node, object_id, deadline)
+        with self.lock:
+            dtype, shape = self.meta[object_id]
+            return buf.to_array(dtype, shape).copy()
+
+    def _fetch(self, node: int, object_id: str, deadline: float) -> ChunkedBuffer:
+        """Pull object into ``node``'s store, retrying on sender failure."""
+        while True:
+            with self.cv:
+                loc = self.directory.checkout_location(
+                    object_id, remove=True, exclude=node
+                )
+                if loc is None or loc.node in self.dead:
+                    if loc is not None:  # stale location on a dead node
+                        self.directory.return_location(object_id, loc.node)
+                        self.directory.fail_node(loc.node)
+                        continue
+                    self.directory.assert_available(object_id)
+                    if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
+                        raise TimeoutError(f"Get({object_id}) timed out")
+                    continue
+                size = self.directory.size_of(object_id)
+                src_buf = self.stores[loc.node].get(object_id)
+                dst_buf = self.stores[node].get(object_id)
+                if dst_buf is None:
+                    dst_buf = self.stores[node].create(
+                        object_id, size, pinned=False, chunk_size=self.chunk_size
+                    )
+                self.directory.publish_partial(object_id, node, size)
+            try:
+                self._stream_copy(loc.node, node, src_buf, dst_buf)
+            except DeadNode:
+                with self.cv:
+                    self.directory.fail_node(loc.node)
+                continue
+            with self.cv:
+                self.directory.publish_complete(object_id, node, size)
+                self.directory.return_location(object_id, loc.node)
+                self.cv.notify_all()
+            return dst_buf
+
+    def _stream_copy(
+        self, src: int, dst: int, src_buf: ChunkedBuffer, dst_buf: ChunkedBuffer
+    ):
+        """Chunk-pipelined copy gated on source progress."""
+        n = src_buf.num_chunks()
+        for k in range(n):
+            hi = min(src_buf.size, (k + 1) * src_buf.chunk_size)
+            with self.cv:
+                while src_buf.bytes_present < hi:
+                    if src in self.dead:
+                        raise DeadNode(str(src))
+                    self.cv.wait(timeout=5.0)
+                if src in self.dead:
+                    raise DeadNode(str(src))
+                chunk = src_buf.read_chunk(k).copy()
+            if self.pace:
+                time.sleep(self.pace)
+            with self.cv:
+                if dst in self.dead:
+                    raise DeadNode(str(dst))
+                dst_buf.write_chunk(k * src_buf.chunk_size, chunk)
+                self.bytes_sent_per_node[src] += chunk.size
+                self.transfers.append((src, dst, src_buf and dst_buf and ""))
+                self.cv.notify_all()
+
+    def get_async(self, node: int, object_id: str, timeout: float = 30.0) -> Future:
+        fut: Future = Future()
+
+        def run():
+            try:
+                fut.set_result(self.get(node, object_id, timeout))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._spawn(run)
+        return fut
+
+    # -- Reduce -----------------------------------------------------------------
+
+    def reduce(
+        self,
+        node: int,
+        target_id: str,
+        source_ids: Sequence[str],
+        op: ReduceOp = SUM,
+        timeout: float = 60.0,
+    ) -> str:
+        """Blocking chained reduce (paper section 4.3), including the 2-D
+        sqrt(n) decomposition when n*B*L > S."""
+        self._check_alive(node)
+        deadline = time.time() + timeout
+        # Wait for the first source to learn dtype/shape/size.
+        first = self._wait_any_meta(source_ids, deadline)
+        dtype, shape = self.meta[first]
+        size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        n = len(source_ids)
+        if n > 3 and use_two_dimensional(n, self.link, size):
+            groups = partition_groups(list(source_ids))
+            sub_ids = []
+            futs = []
+            for gi, group in enumerate(groups):
+                sub_id = f"{target_id}/g{gi}"
+                coord = self._first_location(group, deadline)
+                sub_ids.append(sub_id)
+                futs.append(self._reduce_async(coord, sub_id, group, op, deadline))
+            for f in futs:
+                f.result(timeout=max(0.0, deadline - time.time()))
+            return self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
+        return self._reduce_chain_blocking(node, target_id, list(source_ids), op, deadline)
+
+    def _reduce_async(self, node, target_id, source_ids, op, deadline) -> Future:
+        fut: Future = Future()
+
+        def run():
+            try:
+                fut.set_result(
+                    self._reduce_chain_blocking(node, target_id, source_ids, op, deadline)
+                )
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._spawn(run)
+        return fut
+
+    def _wait_any_meta(self, source_ids, deadline) -> str:
+        with self.cv:
+            while True:
+                for oid in source_ids:
+                    if oid in self.meta:
+                        return oid
+                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
+                    raise TimeoutError("reduce: no source metadata")
+
+    def _first_location(self, source_ids, deadline) -> int:
+        """Node of the first-ready source in a group (sub-coordinator)."""
+        with self.cv:
+            while True:
+                for oid in source_ids:
+                    locs = self.directory.locations(oid)
+                    for l in locs:
+                        if l.progress is Progress.COMPLETE and l.node not in self.dead:
+                            return l.node
+                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
+                    raise TimeoutError("reduce: no group coordinator")
+
+    def _reduce_chain_blocking(
+        self, node: int, target_id: str, source_ids: List[str], op: ReduceOp, deadline
+    ) -> str:
+        """Arrival-order 1-D chain with streaming hop execution."""
+        chain = ChainState(node, tag=target_id)
+        pending = set(source_ids)
+        hop_futures: List[Future] = []
+        first = self._wait_any_meta(source_ids, deadline)
+        dtype, shape = self.meta[first]
+        while pending:
+            ready = None
+            with self.cv:
+                while ready is None:
+                    for oid in list(pending):
+                        locs = [
+                            l
+                            for l in self.directory.locations(oid)
+                            if l.progress is Progress.COMPLETE and l.node not in self.dead
+                        ]
+                        if locs or self.directory.get_inline(oid) is not None:
+                            src = locs[0].node if locs else node
+                            ready = (oid, src)
+                            break
+                    if ready is None:
+                        if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
+                            raise TimeoutError(f"reduce: sources never ready: {pending}")
+            oid, src = ready
+            pending.discard(oid)
+            hop = chain.on_ready(src, oid)
+            if hop is not None:
+                hop_futures.append(self._exec_hop_async(hop, dtype, shape, op, deadline))
+        for f in hop_futures:
+            f.result(timeout=max(0.0, deadline - time.time()))
+        # Final hop into the receiver + fold receiver-local objects.
+        final = chain.final_hop(target_id + "#in")
+        acc: Optional[np.ndarray] = None
+        if final is not None:
+            buf = self._fetch_from(node, final.src_object, final.src_node, deadline)
+            acc = buf.to_array(dtype, shape).astype(dtype, copy=True)
+        for oid in chain.local_objects:
+            val = self.get(node, oid, timeout=max(0.0, deadline - time.time()))
+            acc = val.astype(dtype, copy=True) if acc is None else op(acc, val)
+        assert acc is not None, "empty reduce"
+        self.put(node, target_id, acc.reshape(shape))
+        return target_id
+
+    def _exec_hop_async(self, hop, dtype, shape, op, deadline) -> Future:
+        """Run one chain hop: dst streams src's partial result in and
+        reduces it with its local object chunk-by-chunk."""
+        fut: Future = Future()
+
+        def run():
+            try:
+                size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+                with self.lock:
+                    self.meta[hop.out_object] = (np.dtype(dtype), tuple(shape))
+                    local_buf = self.stores[hop.dst_node].get(hop.dst_object)
+                    if local_buf is None:
+                        raise ObjectLost(hop.dst_object)
+                    out = self.stores[hop.dst_node].create(
+                        hop.out_object, size, pinned=True, chunk_size=self.chunk_size
+                    )
+                    src_buf = self.stores[hop.src_node].get(hop.src_object)
+                    self.directory.publish_partial(hop.out_object, hop.dst_node, size)
+                self._stream_reduce(hop.src_node, hop.dst_node, src_buf, local_buf, out, dtype, op)
+                with self.cv:
+                    self.directory.publish_complete(hop.out_object, hop.dst_node, size)
+                    self.cv.notify_all()
+                fut.set_result(hop.out_object)
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._spawn(run)
+        return fut
+
+    def _stream_reduce(self, src, dst, src_buf, local_buf, out, dtype, op):
+        """out[k] = op(src[k], local[k]) chunk-by-chunk, gated on src
+        progress -- the streaming add of a reduce hop."""
+        itemsize = np.dtype(dtype).itemsize
+        assert self.chunk_size % itemsize == 0
+        n = src_buf.num_chunks()
+        for k in range(n):
+            hi = min(src_buf.size, (k + 1) * src_buf.chunk_size)
+            with self.cv:
+                while src_buf.bytes_present < hi:
+                    if src in self.dead:
+                        raise DeadNode(str(src))
+                    self.cv.wait(timeout=5.0)
+                a = src_buf.read_chunk(k).view(dtype)
+                b = local_buf.read_chunk(k).view(dtype)
+            if self.pace:
+                time.sleep(self.pace)
+            c = op(a, b)
+            with self.cv:
+                out.write_chunk(k * src_buf.chunk_size, c.view(np.uint8))
+                self.bytes_sent_per_node[src] += a.size * itemsize
+                self.cv.notify_all()
+
+    def _fetch_from(self, node, object_id, src_node, deadline) -> ChunkedBuffer:
+        """Stream a specific remote object into ``node`` (final chain hop)."""
+        with self.cv:
+            while True:
+                src_buf = self.stores[src_node].get(object_id)
+                if src_buf is not None:
+                    break
+                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
+                    raise TimeoutError(f"fetch {object_id}")
+            dst_buf = self.stores[node].create(
+                object_id, src_buf.size, pinned=False, chunk_size=self.chunk_size
+            )
+        self._stream_copy(src_node, node, src_buf, dst_buf)
+        return dst_buf
+
+    # -- Delete / failures --------------------------------------------------------
+
+    def delete(self, object_id: str):
+        with self.cv:
+            nodes = self.directory.delete(object_id)
+            for nid in nodes:
+                if nid < len(self.stores):
+                    self.stores[nid].delete(object_id)
+            self.meta.pop(object_id, None)
+            self.cv.notify_all()
+
+    def fail_node(self, node: int) -> List[str]:
+        """Kill a node: all its copies vanish; returns orphaned object ids
+        (no surviving copy anywhere -- framework must recover, section 7)."""
+        with self.cv:
+            self.dead.add(node)
+            self.stores[node] = NodeStore(node)
+            orphaned = self.directory.fail_node(node)
+            self.cv.notify_all()
+        return orphaned
+
+    def restart_node(self, node: int):
+        with self.cv:
+            self.dead.discard(node)
+            self.stores[node] = NodeStore(node)
+            self.cv.notify_all()
+
+    def fail_directory_primary(self):
+        """Kill the primary directory; promote replica (paper section 7)."""
+        with self.cv:
+            self.directory.fail_primary()
+            self.cv.notify_all()

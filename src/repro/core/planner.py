@@ -1,0 +1,184 @@
+"""Reduce chain construction math (paper section 4.3 + Appendix A).
+
+The planner decides, for a reduce over ``n`` objects of size ``S`` on links
+with bandwidth ``B`` (bytes/s) and latency ``L`` (s), whether to use a
+one-dimensional pipelined chain or to recursively split into sqrt(n)
+chains of sqrt(n) ("two-dimensional chain").
+
+Paper Appendix A:
+
+    T_1d(n) = S/B + (n-1) L
+    T_2d(n) = 2 T_1d(sqrt(n)) = 2S/B + 2(sqrt(n)-1) L
+
+    use 1-D  when  n B L <= S
+    use 2-D  when  n B L  > S
+
+and each sqrt(n) chain recursively breaks down until m B L <= S, giving
+O(log log n) recursion depth.
+
+These functions are pure math shared by:
+  * the discrete-event simulator (core/simulation.py),
+  * the threaded in-process cluster (core/local.py),
+  * the TPU collective schedule builder (core/collectives.py), which feeds
+    ICI/DCN constants instead of TCP constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+# ---------------------------------------------------------------------------
+# Hardware constants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Bandwidth/latency of one node-to-node link."""
+
+    bandwidth: float  # bytes / second
+    latency: float  # seconds
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+
+# Paper testbed: m5.4xlarge, 10 Gb/s, ~125 us estimated p2p latency.
+EC2_LINK = LinkSpec(bandwidth=10e9 / 8, latency=125e-6)
+
+# TPU v5e targets (per system spec): ~50 GB/s/link ICI, ~1 us latency.
+ICI_LINK = LinkSpec(bandwidth=50e9, latency=1e-6)
+
+# Cross-pod data-center network (DCN): much lower bandwidth, higher latency.
+DCN_LINK = LinkSpec(bandwidth=12.5e9, latency=25e-6)
+
+
+# ---------------------------------------------------------------------------
+# Chain selection (Appendix A)
+# ---------------------------------------------------------------------------
+
+
+def use_two_dimensional(n: int, link: LinkSpec, size: float) -> bool:
+    """Paper condition: two-dimensional chain iff n * B * L > S."""
+    return n * link.bandwidth * link.latency > size
+
+
+def t_1d(n: int, link: LinkSpec, size: float) -> float:
+    """Pipelined 1-D chain completion time (Appendix A)."""
+    return size / link.bandwidth + (n - 1) * link.latency
+
+
+def t_2d(n: int, link: LinkSpec, size: float) -> float:
+    return 2 * size / link.bandwidth + 2 * (math.isqrt(n) - 1) * link.latency
+
+
+def predicted_reduce_time(n: int, link: LinkSpec, size: float) -> float:
+    return min(t_1d(n, link, size), t_2d(n, link, size)) if n > 1 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Recursive chain plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ChainPlan:
+    """A (possibly recursive) reduce plan over abstract slot indices.
+
+    ``groups`` is a list of index groups; each group is reduced by a 1-D
+    chain (in arrival order at run time), and the group results are then
+    chained together.  A plan with a single group is a plain 1-D chain.
+    Nested plans (``subplans``) realize the O(log log n) recursion.
+    """
+
+    indices: List[int]
+    groups: List[List[int]]
+    subplans: List["ChainPlan"]
+    depth: int
+
+    @property
+    def is_flat(self) -> bool:
+        return len(self.groups) == 1
+
+    def chain_lengths(self) -> List[int]:
+        out = []
+        if self.subplans:
+            for sp in self.subplans:
+                out.extend(sp.chain_lengths())
+            out.append(len(self.groups))
+        else:
+            out.append(len(self.indices))
+        return out
+
+
+def plan_reduce(
+    indices: Sequence[int],
+    link: LinkSpec,
+    size: float,
+    rng=None,
+    _depth: int = 0,
+) -> ChainPlan:
+    """Build the (recursive) chain plan for reducing ``indices``.
+
+    Paper section 4.3: "The receiver node randomly partitions the n input
+    objects into sqrt(n) subsets. It picks one node from each partition to
+    recursively coordinate a one-dimensional reduce chain. ... Each chain of
+    sqrt(n) objects can recursively break down into smaller chains until
+    m B L <= S. Overall, a reduce breaks down O(log log n) times."
+    """
+    import random
+
+    indices = list(indices)
+    n = len(indices)
+    if n <= 2 or not use_two_dimensional(n, link, size):
+        return ChainPlan(indices=indices, groups=[indices], subplans=[], depth=_depth)
+
+    rng = rng or random.Random(0)
+    shuffled = list(indices)
+    rng.shuffle(shuffled)
+    k = max(2, math.isqrt(n))  # number of groups ~ sqrt(n)
+    groups: List[List[int]] = [[] for _ in range(k)]
+    for i, idx in enumerate(shuffled):
+        groups[i % k].append(idx)
+    groups = [g for g in groups if g]
+
+    subplans = []
+    for g in groups:
+        # Recurse: each group's chain may itself split (until m B L <= S).
+        subplans.append(plan_reduce(g, link, size, rng=rng, _depth=_depth + 1))
+    return ChainPlan(indices=indices, groups=groups, subplans=subplans, depth=_depth)
+
+
+def plan_depth(plan: ChainPlan) -> int:
+    if not plan.subplans:
+        return 0
+    return 1 + max(plan_depth(sp) for sp in plan.subplans)
+
+
+def max_chain_length(plan: ChainPlan) -> int:
+    return max(plan.chain_lengths())
+
+
+# ---------------------------------------------------------------------------
+# Broadcast model (for analysis / tests; the broadcast itself is fully
+# decentralized at run time -- see scheduler.select_sender)
+# ---------------------------------------------------------------------------
+
+
+def t_pipelined_multicast(n_receivers: int, link: LinkSpec, size: float, chunk: float) -> float:
+    """Completion time of Hoplite's receiver-driven broadcast when all
+    receivers are ready: behaves like a pipelined relay chain/tree where
+    every node sends to at most one peer at a time.  With chunked
+    pipelining the dominant term is S/B; each additional hop adds one
+    chunk's serialization + link latency."""
+    hops = max(1, math.ceil(math.log2(n_receivers + 1)))
+    return size / link.bandwidth + (hops - 1) * (link.latency + chunk / link.bandwidth)
+
+
+def t_binomial_store_forward(n_receivers: int, link: LinkSpec, size: float) -> float:
+    """MPI-style binomial broadcast WITHOUT pipelining: ceil(log2(n+1))
+    rounds, each a full store-and-forward object transfer."""
+    rounds = math.ceil(math.log2(n_receivers + 1))
+    return rounds * link.transfer_time(size)

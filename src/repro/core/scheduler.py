@@ -1,0 +1,107 @@
+"""Receiver-driven coordination (paper section 4.3).
+
+Pure protocol state machines, shared by the discrete-event simulator
+(core/simulation.py) and the threaded in-process cluster (core/local.py):
+
+  * broadcast sender selection is entirely delegated to
+    ``ObjectDirectory.checkout_location`` (one location per query, complete
+    copies preferred, checked out while the transfer is in flight);
+
+  * ``ChainState`` implements the arrival-order 1-D reduce chain: the
+    coordinator observes source objects becoming ready and emits *hop*
+    instructions ("node holding the current partial result streams it to
+    the newly-ready node, which reduces it with its local object");
+
+  * ``partition_groups`` implements the 2-D (sqrt-n) random partition.
+
+The paper's worked example (section 4.3) is encoded as a unit test:
+objects a,b,c,d on nodes A,B,C,D, receiver D, arrival order a,d,c,b =>
+hops A->C (a+c), C->B (a+b+c), B->D (final).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Hop:
+    """One reduce-chain hop: ``src_node`` streams the current partial
+    result object into ``dst_node``, which reduces it with its local
+    ready object ``dst_object`` to produce ``out_object``."""
+
+    src_node: int
+    src_object: str
+    dst_node: int
+    dst_object: str
+    out_object: str
+
+
+class ChainState:
+    """Arrival-order 1-D chain coordinator.
+
+    The receiver folds its *own* local source objects at the very end (the
+    paper avoids early transfers into the final destination: "the receiver
+    node does not immediately reduce these together, since this would
+    result in an additional transfer to node D").
+    """
+
+    def __init__(self, receiver_node: int, tag: str = "red"):
+        self.receiver_node = receiver_node
+        self.tag = tag
+        self._tail: Optional[Tuple[int, str]] = None  # (node, object_id)
+        self._local: List[str] = []  # receiver-local ready objects
+        self._hops = 0
+
+    @property
+    def tail(self) -> Optional[Tuple[int, str]]:
+        return self._tail
+
+    @property
+    def local_objects(self) -> List[str]:
+        return list(self._local)
+
+    def on_ready(self, node: int, object_id: str) -> Optional[Hop]:
+        """A source object became ready at ``node``.  Returns the hop to
+        issue now, or None (first non-receiver object / receiver-local)."""
+        if node == self.receiver_node:
+            self._local.append(object_id)
+            return None
+        if self._tail is None:
+            self._tail = (node, object_id)
+            return None
+        src_node, src_object = self._tail
+        self._hops += 1
+        out_object = f"{self.tag}-hop{self._hops}-{object_id}"
+        hop = Hop(src_node, src_object, node, object_id, out_object)
+        self._tail = (node, out_object)
+        return hop
+
+    def final_hop(self, final_object: str) -> Optional[Hop]:
+        """All sources ready: stream the tail into the receiver (which then
+        folds its local objects).  None if everything was receiver-local."""
+        if self._tail is None:
+            return None
+        src_node, src_object = self._tail
+        return Hop(src_node, src_object, self.receiver_node, "<local>", final_object)
+
+
+def partition_groups(
+    items: Sequence, rng: Optional[random.Random] = None, num_groups: Optional[int] = None
+) -> List[List]:
+    """Randomly partition ``items`` into ~sqrt(n) groups (paper 4.3)."""
+    items = list(items)
+    n = len(items)
+    if n <= 2:
+        return [items]
+    rng = rng or random.Random(0)
+    k = num_groups or max(2, math.isqrt(n))
+    shuffled = list(items)
+    rng.shuffle(shuffled)
+    groups: List[List] = [[] for _ in range(k)]
+    for i, it in enumerate(shuffled):
+        groups[i % k].append(it)
+    return [g for g in groups if g]

@@ -1,0 +1,832 @@
+"""Discrete-event cluster simulator for Hoplite and its baselines.
+
+The container has one CPU device, so the paper's 16-node EC2 evaluation is
+reproduced with a chunk-granularity discrete-event network simulator that
+runs the *actual* Hoplite control plane (ObjectDirectory, checkout
+semantics, ChainState, planner) over a modeled data plane:
+
+  * every node has a FIFO egress resource and a FIFO ingress resource of
+    ``bandwidth`` bytes/s -- bandwidth sharing between concurrent flows
+    emerges from chunk interleaving (Ray-style fan-out gets B/k per flow,
+    Hoplite's one-outbound-transfer cap emerges from directory checkout);
+  * each chunk pays the link ``latency`` once, overlapped across chunks
+    (cut-through), so a pipelined relay chain costs S/B + hops * (L + c/B),
+    matching the paper's Appendix A algebra;
+  * executor<->store memory copies are modeled as per-node memory streams
+    of ``mem_bandwidth`` bytes/s -- Hoplite overlaps them with the network
+    (partial-object publication), Ray-style baselines serialize them;
+  * the directory is the real ObjectDirectory; every directory RPC costs
+    ``dir_latency`` (the paper measures ~170 us per op on EC2).
+
+Baselines:
+  * ``MPIStyle``  -- static store-and-forward binomial trees (rank-ordered)
+    plus closed-form large-message algorithms (scatter+allgather /
+    Rabenseifner), mirroring MPICH's size-dependent algorithm choice;
+  * ``RayStyle``  -- producer-only fetches (no relay, no partial senders),
+    memory copies serialized with the network, reduce = gather-then-add.
+
+Buffers are *symbolic*: they carry (size, progress, contributor label set)
+rather than real bytes, so protocol correctness (every reduce contains
+every contribution exactly once; every broadcast delivers the root object)
+is asserted on every run.  Real-byte correctness is covered by the
+threaded cluster in core/local.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.api import SMALL_OBJECT_THRESHOLD, Progress
+from repro.core.directory import ObjectDirectory
+from repro.core.planner import LinkSpec, EC2_LINK, use_two_dimensional
+from repro.core.scheduler import ChainState, Hop, partition_groups
+
+# ---------------------------------------------------------------------------
+# Event kernel (miniature SimPy)
+# ---------------------------------------------------------------------------
+
+
+class Event:
+    __slots__ = ("sim", "done", "value", "_waiters")
+
+    def __init__(self, sim: "Simulator"):
+        self.sim = sim
+        self.done = False
+        self.value = None
+        self._waiters: List[Callable] = []
+
+    def succeed(self, value=None):
+        if self.done:
+            return
+        self.done = True
+        self.value = value
+        waiters, self._waiters = self._waiters, []
+        for w in waiters:
+            self.sim._post(w, self)
+
+    def add_waiter(self, fn: Callable):
+        if self.done:
+            self.sim._post(fn, self)
+        else:
+            self._waiters.append(fn)
+
+
+class Simulator:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
+        self._seq = 0
+
+    def _post(self, fn: Callable, *args):
+        self.schedule(0.0, fn, *args)
+
+    def schedule(self, delay: float, fn: Callable, *args):
+        self._seq += 1
+        heapq.heappush(self._heap, (self.now + delay, self._seq, fn, args))
+
+    def timeout(self, delay: float) -> Event:
+        ev = Event(self)
+        self.schedule(delay, ev.succeed)
+        return ev
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def all_of(self, events: Sequence[Event]) -> Event:
+        out = Event(self)
+        remaining = [len(events)]
+        if not events:
+            out.succeed()
+            return out
+
+        def on_one(_ev):
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                out.succeed()
+
+        for e in events:
+            e.add_waiter(on_one)
+        return out
+
+    def process(self, gen) -> Event:
+        """Drive a generator that yields Events; returns completion event
+        carrying the generator's return value."""
+        done = Event(self)
+
+        def step(ev: Optional[Event]):
+            try:
+                nxt = gen.send(ev.value if ev is not None else None)
+            except StopIteration as stop:
+                done.succeed(getattr(stop, "value", None))
+                return
+            nxt.add_waiter(step)
+
+        self._post(lambda _e: step(None), None)
+        return done
+
+    def run(self, until: Optional[float] = None) -> float:
+        while self._heap:
+            t, _seq, fn, args = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                self.now = until
+                return self.now
+            self.now = t
+            fn(*args)
+        return self.now
+
+
+class FIFOResource:
+    """A serialized resource (egress NIC, ingress NIC, memory engine)."""
+
+    __slots__ = ("sim", "busy_until", "busy_time")
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+        self.busy_until = 0.0
+        self.busy_time = 0.0  # total occupancy, for utilization accounting
+
+    def serve(self, service_time: float) -> Event:
+        start = max(self.sim.now, self.busy_until)
+        self.busy_until = start + service_time
+        self.busy_time += service_time
+        ev = Event(self.sim)
+        self.sim.schedule(self.busy_until - self.sim.now, ev.succeed)
+        return ev
+
+
+# ---------------------------------------------------------------------------
+# Symbolic buffers
+# ---------------------------------------------------------------------------
+
+
+class SimBuffer:
+    """Size + monotonic progress + contributor label set (no real bytes)."""
+
+    __slots__ = ("object_id", "size", "bytes_present", "content", "_waiters", "sim")
+
+    def __init__(self, sim: Simulator, object_id: str, size: int, content=frozenset()):
+        self.sim = sim
+        self.object_id = object_id
+        self.size = size
+        self.bytes_present = 0
+        self.content = frozenset(content)
+        self._waiters: List[Tuple[int, Event]] = []
+
+    @property
+    def complete(self) -> bool:
+        return self.bytes_present >= self.size
+
+    def advance(self, new_bytes_present: int):
+        self.bytes_present = max(self.bytes_present, min(self.size, new_bytes_present))
+        fired = [(n, e) for (n, e) in self._waiters if self.bytes_present >= n]
+        self._waiters = [(n, e) for (n, e) in self._waiters if self.bytes_present < n]
+        for _n, e in fired:
+            e.succeed()
+
+    def fill(self, content=None):
+        if content is not None:
+            self.content = frozenset(content)
+        self.advance(self.size)
+
+    def merge_content(self, other: frozenset):
+        self.content = self.content | other
+
+    def wait_bytes(self, n: int) -> Event:
+        ev = Event(self.sim)
+        if self.bytes_present >= min(n, self.size):
+            ev.succeed()
+        else:
+            self._waiters.append((min(n, self.size), ev))
+        return ev
+
+
+# ---------------------------------------------------------------------------
+# Network / cluster substrate
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    num_nodes: int = 16
+    link: LinkSpec = EC2_LINK
+    mem_bandwidth: float = 3.3e9  # executor<->store memcpy bytes/s
+    mem_latency: float = 2e-6
+    dir_latency: float = 170e-6  # paper: ~167-177 us per directory op
+    chunk_size: int = 64 * 1024  # simulation granularity
+    max_chunks: int = 256  # cap events per stream; chunk grows for big objects
+    reduce_bandwidth: float = 6.6e9  # streaming add bytes/s
+
+    def chunks_for(self, size: int) -> Tuple[int, int]:
+        """(num_chunks, chunk_bytes) with an event-count cap."""
+        if size <= 0:
+            return 1, 1
+        c = max(self.chunk_size, -(-size // self.max_chunks))
+        n = max(1, -(-size // c))
+        return n, c
+
+
+class Node:
+    def __init__(self, sim: Simulator, node_id: int):
+        self.id = node_id
+        self.egress = FIFOResource(sim)
+        self.ingress = FIFOResource(sim)
+        self.mem = FIFOResource(sim)
+        self.buffers: Dict[str, SimBuffer] = {}
+        self.failed = False
+
+
+class SimCluster:
+    """Substrate shared by Hoplite and the baselines."""
+
+    def __init__(self, spec: ClusterSpec = ClusterSpec()):
+        self.spec = spec
+        self.sim = Simulator()
+        self.nodes = [Node(self.sim, i) for i in range(spec.num_nodes)]
+        self.directory = ObjectDirectory()
+        self.bytes_on_wire = 0
+
+    # -- data plane ----------------------------------------------------------
+
+    def net_stream(
+        self,
+        src: int,
+        dst: int,
+        src_buf: SimBuffer,
+        dst_buf: SimBuffer,
+        *,
+        on_progress: Optional[Callable] = None,
+        reduce_into: bool = False,
+    ) -> Event:
+        """Stream src_buf -> dst_buf over the network, chunk-pipelined.
+
+        Gated on src availability (partial senders never forward bytes they
+        do not hold).  ``reduce_into`` adds a memory-engine service per
+        chunk at the receiver (the streaming add of a reduce hop)."""
+        spec = self.spec
+        if self.nodes[src].failed or self.nodes[dst].failed:
+            ev = self.sim.event()
+            return ev  # never fires: transfer stalls on a dead endpoint
+        size = dst_buf.size
+        nchunks, csize = spec.chunks_for(size)
+        self.bytes_on_wire += size
+        done = self.sim.event()
+        delivered = [0]
+
+        def deliver(k: int, upto: int):
+            def after_ingress(_ev):
+                if reduce_into:
+                    self.nodes[dst].mem.serve(
+                        (upto - dst_buf.bytes_present) / spec.reduce_bandwidth
+                    ).add_waiter(lambda _e: landed())
+                else:
+                    landed()
+
+            def landed():
+                dst_buf.advance(upto)
+                if on_progress:
+                    on_progress(dst_buf.bytes_present)
+                delivered[0] += 1
+                if delivered[0] == nchunks:
+                    done.succeed()
+
+            self.nodes[dst].ingress.serve(
+                min(csize, size - k * csize) / spec.link.bandwidth
+            ).add_waiter(after_ingress)
+
+        def driver():
+            for k in range(nchunks):
+                upto = min(size, (k + 1) * csize)
+                yield src_buf.wait_bytes(upto)
+                this = upto - k * csize
+                yield self.nodes[src].egress.serve(this / spec.link.bandwidth)
+                # propagation: fire-and-forget so latency overlaps next chunk
+                self.sim.schedule(spec.link.latency, deliver, k, upto)
+
+        self.sim.process(driver())
+        return done
+
+    def mem_stream(self, node: int, src_buf: SimBuffer, dst_buf: SimBuffer) -> Event:
+        """Executor<->store copy on one node (chunked, pipelined)."""
+        spec = self.spec
+        size = dst_buf.size
+        nchunks, csize = spec.chunks_for(size)
+        done = self.sim.event()
+        finished = [0]
+
+        def driver():
+            for k in range(nchunks):
+                upto = min(size, (k + 1) * csize)
+                yield src_buf.wait_bytes(upto)
+                this = upto - k * csize
+                yield self.nodes[node].mem.serve(this / spec.mem_bandwidth)
+                dst_buf.advance(upto)
+                finished[0] += 1
+                if finished[0] == nchunks:
+                    done.succeed()
+
+        self.sim.process(driver())
+        return done
+
+    def new_buffer(self, node: int, object_id: str, size: int, content=frozenset()) -> SimBuffer:
+        buf = SimBuffer(self.sim, object_id, size, content)
+        self.nodes[node].buffers[object_id] = buf
+        return buf
+
+    def fail_node(self, node: int) -> List[str]:
+        self.nodes[node].failed = True
+        self.nodes[node].buffers.clear()
+        return self.directory.fail_node(node)
+
+
+# ---------------------------------------------------------------------------
+# Hoplite protocols
+# ---------------------------------------------------------------------------
+
+
+class Hoplite:
+    """The paper's protocols running over the simulated substrate."""
+
+    def __init__(self, cluster: SimCluster):
+        self.c = cluster
+        self.sim = cluster.sim
+        self.spec = cluster.spec
+        self.directory = cluster.directory
+
+    # -- Put -----------------------------------------------------------------
+
+    def put(self, node: int, object_id: str, size: int, label=None) -> Event:
+        """Executor creates an object: pipelined copy into the local store;
+        partial location published immediately (section 4.2)."""
+        content = frozenset([label if label is not None else object_id])
+
+        def proc():
+            if size < SMALL_OBJECT_THRESHOLD:
+                # Small-object fast path: cache in the directory itself.
+                yield self.sim.timeout(self.spec.dir_latency)
+                store_buf = self.c.new_buffer(node, object_id, size, content)
+                store_buf.fill(content)
+                self.directory.publish_inline(object_id, content, size)
+                self.directory.publish_complete(object_id, node, size)
+                return
+
+            exec_buf = SimBuffer(self.sim, object_id + "#exec", size, content)
+            exec_buf.fill(content)
+            store_buf = self.c.new_buffer(node, object_id, size, content)
+            # Publish partial location BEFORE the copy completes.
+            yield self.sim.timeout(self.spec.dir_latency)
+            self.directory.publish_partial(object_id, node, size)
+            yield self.c.mem_stream(node, exec_buf, store_buf)
+            self.directory.publish_complete(object_id, node, size)
+
+        return self.sim.process(proc())
+
+    # -- Get (point-to-point and emergent broadcast) --------------------------
+
+    def get(self, node: int, object_id: str, *, to_executor: bool = True) -> Event:
+        """Receiver-driven fetch (sections 4.2-4.3)."""
+
+        def proc():
+            # Directory query (sync form: blocks until a location exists).
+            yield self.sim.timeout(self.spec.dir_latency)
+            size = self.directory.size_of(object_id)
+            inline = self.directory.get_inline(object_id)
+            if inline is not None:
+                # Small object returned inline with the directory reply.
+                buf = self.c.new_buffer(node, object_id, size, inline)
+                buf.fill(inline)
+                return buf
+            local = self.c.nodes[node].buffers.get(object_id)
+            if local is not None and local.complete:
+                return local
+            while True:
+                loc = self.directory.checkout_location(object_id, remove=True, exclude=node)
+                if loc is not None:
+                    break
+                ev = self.sim.event()
+                cb = lambda _oid: ev.succeed()
+                self.directory.subscribe(object_id, cb)
+                yield ev
+                self.directory.unsubscribe(object_id, cb)
+                yield self.sim.timeout(self.spec.dir_latency)
+            size = self.directory.size_of(object_id)
+            src_buf = self.c.nodes[loc.node].buffers[object_id]
+            dst_buf = self.c.nodes[node].buffers.get(object_id)
+            if dst_buf is None:
+                dst_buf = self.c.new_buffer(node, object_id, size, src_buf.content)
+            # Publish own partial location so later receivers can chain off us.
+            self.directory.publish_partial(object_id, node, size)
+            # Control message to the sender.
+            yield self.sim.timeout(self.spec.link.latency)
+            if to_executor:
+                exec_buf = SimBuffer(self.sim, object_id + "#exec", size)
+                copy_done = self.c.mem_stream(node, dst_buf, exec_buf)
+            net_done = self.c.net_stream(loc.node, node, src_buf, dst_buf)
+            yield net_done
+            dst_buf.merge_content(src_buf.content)
+            self.directory.publish_complete(object_id, node, size)
+            # Hand the sender slot back (section 4.3).
+            self.directory.return_location(object_id, loc.node)
+            if to_executor:
+                yield copy_done
+            return dst_buf
+
+        return self.sim.process(proc())
+
+    # -- Reduce ----------------------------------------------------------------
+
+    def reduce(
+        self,
+        node: int,
+        target_id: str,
+        source_ids: Dict[str, int],
+        size: int,
+        ready_events: Optional[Dict[str, Event]] = None,
+        _top: bool = True,
+    ) -> Event:
+        """Receiver-driven chained reduce (section 4.3).
+
+        ``source_ids`` maps object id -> node where it is (or will be)
+        created.  ``ready_events`` optionally gates each source on an
+        application event (asynchronous arrival); otherwise sources are
+        assumed Put elsewhere and discovered via directory subscription.
+        """
+        n = len(source_ids)
+        two_d = n > 3 and use_two_dimensional(n, self.spec.link, size)
+        if two_d:
+            return self._reduce_2d(node, target_id, source_ids, size, ready_events)
+        return self._reduce_chain(node, target_id, source_ids, size, ready_events, _top)
+
+    def _arrival_feed(self, source_ids: Dict[str, int], ready_events):
+        """Yields (oid, node) in readiness order via directory subscription."""
+        sim = self.sim
+        queue: List[Tuple[str, int]] = []
+        waiter: List[Optional[Event]] = [None]
+        seen = set()
+
+        def on_pub(oid, src_node):
+            if oid in seen:
+                return
+            seen.add(oid)
+            queue.append((oid, src_node))
+            if waiter[0] is not None and not waiter[0].done:
+                waiter[0].succeed()
+
+        for oid, src_node in source_ids.items():
+            if ready_events and oid in ready_events:
+                ready_events[oid].add_waiter(
+                    lambda _e, o=oid, s=src_node: on_pub(o, s)
+                )
+            else:
+                self.directory.subscribe(
+                    oid, lambda _o, o=oid, s=src_node: (on_pub(o, s))
+                )
+
+        def next_arrival():
+            def proc():
+                while not queue:
+                    waiter[0] = sim.event()
+                    yield waiter[0]
+                    waiter[0] = None
+                return queue.pop(0)
+
+            return sim.process(proc())
+
+        return next_arrival
+
+    def _reduce_chain(
+        self, node, target_id, source_ids, size, ready_events, _top=True
+    ) -> Event:
+        """1-D arrival-order chain with streaming hops."""
+
+        def proc():
+            yield self.sim.timeout(self.spec.dir_latency)
+            chain = ChainState(node, tag=target_id)
+            next_arrival = self._arrival_feed(source_ids, ready_events)
+            hop_events: List[Event] = []
+            all_content = frozenset()
+            for _ in range(len(source_ids)):
+                oid, src_node = yield next_arrival()
+                src_node_buf = self.c.nodes[src_node].buffers.get(oid)
+                if src_node_buf is None:
+                    src_node_buf = self.c.new_buffer(src_node, oid, size, frozenset([oid]))
+                    src_node_buf.fill()
+                all_content = all_content | src_node_buf.content
+                hop = chain.on_ready(src_node, oid)
+                if hop is not None:
+                    hop_events.append(self._exec_hop(hop, size))
+            final = chain.final_hop(target_id)
+            result = self.c.nodes[node].buffers.get(target_id)
+            if result is None:
+                result = self.c.new_buffer(node, target_id, size)
+            self.directory.publish_partial(target_id, node, size)
+            if final is not None:
+                src_buf = self.c.nodes[final.src_node].buffers[final.src_object]
+                yield self.sim.timeout(self.spec.link.latency)  # notify sender
+                yield self.c.net_stream(
+                    final.src_node, node, src_buf, result, reduce_into=True
+                )
+                result.merge_content(src_buf.content)
+            # Fold receiver-local source objects (streaming adds).
+            for oid in chain.local_objects:
+                lb = self.c.nodes[node].buffers[oid]
+                result.merge_content(lb.content)
+                yield self.c.nodes[node].mem.serve(size / self.spec.reduce_bandwidth)
+            if not final and not chain.local_objects:
+                result.fill()
+            result.advance(result.size)
+            assert result.content == all_content, (
+                f"reduce dropped contributions: {all_content - result.content}"
+            )
+            self.directory.publish_complete(target_id, node, size)
+            return result
+
+        return self.sim.process(proc())
+
+    def _exec_hop(self, hop: Hop, size: int) -> Event:
+        """Stream the current partial result into the next chain node,
+        reducing with its local object on the fly (section 4.3/4.2).
+
+        The output buffer is created eagerly (synchronously) so that the
+        next hop can immediately chain off it while this hop is still
+        streaming -- that is precisely the paper's pipelining."""
+        src_buf = self.c.nodes[hop.src_node].buffers[hop.src_object]
+        local = self.c.nodes[hop.dst_node].buffers[hop.dst_object]
+        out = self.c.new_buffer(
+            hop.dst_node, hop.out_object, size, src_buf.content | local.content
+        )
+
+        def proc():
+            yield self.sim.timeout(self.spec.link.latency)  # coordinator notify
+            yield self.c.net_stream(hop.src_node, hop.dst_node, src_buf, out, reduce_into=True)
+            out.merge_content(src_buf.content | local.content)
+            return out
+
+        return self.sim.process(proc())
+
+    def _reduce_2d(self, node, target_id, source_ids, size, ready_events) -> Event:
+        """2-D chain: sqrt(n) random groups, one sub-coordinator per group
+        (the first-ready node of the group), then a top-level chain over
+        the group results in completion order (section 4.3)."""
+
+        def proc():
+            yield self.sim.timeout(self.spec.dir_latency)
+            import random as _random
+
+            groups = partition_groups(list(source_ids.items()), _random.Random(1234))
+            sub_results: Dict[str, int] = {}
+            sub_ready: Dict[str, Event] = {}
+            for gi, group in enumerate(groups):
+                sub_id = f"{target_id}/g{gi}"
+                # Sub-coordinator: the node of the group's first listed
+                # object (readiness order inside the group still drives the
+                # sub-chain's own hop order).
+                coord = group[0][1]
+                sub_results[sub_id] = coord
+                ev = self.reduce(
+                    coord, sub_id, dict(group), size, ready_events, _top=False
+                )
+                sub_ready[sub_id] = ev
+            # Top-level chain over group results, ordered by completion.
+            result = yield self._reduce_chain(
+                node, target_id, sub_results, size, sub_ready
+            )
+            return result
+
+        return self.sim.process(proc())
+
+    # -- composed primitives ---------------------------------------------------
+
+    def allreduce(
+        self, nodes: Sequence[int], source_ids: Dict[str, int], target_id: str, size: int
+    ) -> Event:
+        """Reduce to nodes[0] then broadcast: receivers stream the (possibly
+        still partial) result -- reduce and broadcast pipeline end to end."""
+        root = nodes[0]
+        red = self.reduce(root, target_id, source_ids, size)
+        gets = [self.get(n, target_id, to_executor=False) for n in nodes if n != root]
+        return self.sim.all_of([red] + gets)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+class MPIStyle:
+    """Static, rank-ordered, store-and-forward binomial schedules plus the
+    closed-form large-message algorithms MPICH switches to.  No directory
+    (locations are known a priori) -- that is MPI's structural advantage
+    for small objects, per the paper."""
+
+    def __init__(self, cluster: SimCluster):
+        self.c = cluster
+        self.sim = cluster.sim
+        self.spec = cluster.spec
+
+    # Binomial broadcast with per-node arrival times (Figure 7a).
+    def bcast(self, root: int, ranks: Sequence[int], size: int, arrival: Optional[Dict[int, float]] = None) -> Event:
+        arrival = arrival or {}
+        order = [root] + [r for r in ranks if r != root]
+        n = len(order)
+        done_ev = self.sim.event()
+        have: Dict[int, Event] = {}
+        for idx, r in enumerate(order):
+            have[idx] = self.sim.event()
+        remaining = [n - 1]
+
+        def ready_gate(idx):
+            # a rank participates only once its process has arrived
+            t = arrival.get(order[idx], 0.0)
+            ev = self.sim.event()
+            self.sim.schedule(max(0.0, t - self.sim.now), ev.succeed)
+            return ev
+
+        def run_rank(idx):
+            def proc():
+                yield ready_gate(idx)
+                if idx != 0:
+                    yield have[idx]
+                    remaining[0] -= 1
+                    if remaining[0] == 0:
+                        done_ev.succeed()
+                # binomial sends: idx sends to idx + 2^k for 2^k > idx
+                k = 0
+                while True:
+                    peer = idx + (1 << k)
+                    if (1 << k) <= idx:
+                        k += 1
+                        continue
+                    if peer >= n:
+                        break
+                    src_buf = SimBuffer(self.sim, f"b{idx}", size)
+                    src_buf.fill()
+                    dst_buf = SimBuffer(self.sim, f"b{peer}", size)
+                    yield ready_gate(peer)  # rendezvous: receiver must exist
+                    yield self.c.net_stream(order[idx], order[peer], src_buf, dst_buf)
+                    have[peer].succeed()
+                    k += 1
+
+            self.sim.process(proc())
+
+        for idx in range(n):
+            run_rank(idx)
+        if n == 1:
+            done_ev.succeed()
+        return done_ev
+
+    # Closed-form models for the synchronous case (algorithm switch).
+    def bcast_time(self, n: int, size: int) -> float:
+        link = self.spec.link
+        binomial = math.ceil(math.log2(max(2, n))) * link.transfer_time(size)
+        scatter_allgather = 2 * size / link.bandwidth * (n - 1) / n + (
+            math.ceil(math.log2(max(2, n))) + n - 1
+        ) * link.latency
+        return min(binomial, scatter_allgather)
+
+    def reduce_time(self, n: int, size: int) -> float:
+        link = self.spec.link
+        binomial = math.ceil(math.log2(max(2, n))) * (
+            link.transfer_time(size) + size / self.spec.reduce_bandwidth
+        )
+        rabenseifner = 2 * size / link.bandwidth * (n - 1) / n + 2 * math.ceil(
+            math.log2(max(2, n))
+        ) * link.latency + size / self.spec.reduce_bandwidth
+        return min(binomial, rabenseifner)
+
+    def allreduce_time(self, n: int, size: int) -> float:
+        link = self.spec.link
+        rabenseifner = 2 * size / link.bandwidth * (n - 1) / n + 2 * math.ceil(
+            math.log2(max(2, n))
+        ) * link.latency + size / self.spec.reduce_bandwidth
+        return min(self.reduce_time(n, size) + self.bcast_time(n, size), rabenseifner)
+
+    def gather_time(self, n: int, size: int) -> float:
+        link = self.spec.link
+        return (n - 1) * size / link.bandwidth + link.latency
+
+    def p2p_rtt(self, size: int) -> float:
+        return 2 * self.spec.link.transfer_time(size)
+
+    # Binomial reduce with arrivals (Figure 7b): store-and-forward up the tree.
+    def reduce_sim(self, root: int, ranks: Sequence[int], size: int, arrival: Optional[Dict[int, float]] = None) -> Event:
+        arrival = arrival or {}
+        order = [root] + [r for r in ranks if r != root]
+        n = len(order)
+        rounds = math.ceil(math.log2(max(2, n)))
+        ready: Dict[int, Event] = {}
+        for idx, r in enumerate(order):
+            ev = self.sim.event()
+            self.sim.schedule(arrival.get(r, 0.0), ev.succeed)
+            ready[idx] = ev
+
+        def run(idx):
+            def proc():
+                yield ready[idx]
+                # receive from children idx + 2^k (k ascending) that exist
+                for k in range(rounds):
+                    child = idx + (1 << k)
+                    if idx % (1 << (k + 1)) != 0 or child >= n:
+                        continue
+                    yield recv_done[child]
+                    yield self.c.nodes[order[idx]].mem.serve(
+                        size / self.spec.reduce_bandwidth
+                    )
+                if idx != 0:
+                    # send to parent
+                    parent = idx - (idx & -idx)
+                    yield ready[parent]
+                    src = SimBuffer(self.sim, f"r{idx}", size)
+                    src.fill()
+                    dst = SimBuffer(self.sim, f"r{idx}@{parent}", size)
+                    yield self.c.net_stream(order[idx], order[parent], src, dst)
+                recv_done[idx].succeed()
+
+            self.sim.process(proc())
+
+        recv_done = {idx: self.sim.event() for idx in range(n)}
+        for idx in range(n):
+            run(idx)
+        return recv_done[0]
+
+
+class RayStyle:
+    """Ray 0.8-style object transfer: fetch from the producer only, no
+    relaying, no partial-object senders, memory copies serialized."""
+
+    def __init__(self, cluster: SimCluster):
+        self.c = cluster
+        self.sim = cluster.sim
+        self.spec = cluster.spec
+        self.directory = cluster.directory
+        # Ray's small-object path takes extra control hops (plasma seal +
+        # raylet notification + fetch) vs Hoplite's inline directory reply.
+        self.extra_ctrl_rtts = 2
+
+    def put(self, node: int, object_id: str, size: int, label=None) -> Event:
+        content = frozenset([label if label is not None else object_id])
+
+        def proc():
+            exec_buf = SimBuffer(self.sim, object_id + "#exec", size, content)
+            exec_buf.fill(content)
+            store_buf = self.c.new_buffer(node, object_id, size, content)
+            yield self.c.mem_stream(node, exec_buf, store_buf)  # full copy FIRST
+            store_buf.merge_content(content)
+            yield self.sim.timeout(self.spec.dir_latency)
+            self.directory.publish_complete(object_id, node, size)
+
+        return self.sim.process(proc())
+
+    def get(self, node: int, object_id: str, *, to_executor: bool = True) -> Event:
+        def proc():
+            yield self.sim.timeout(
+                self.spec.dir_latency + self.extra_ctrl_rtts * self.spec.link.latency
+            )
+            while True:
+                locs = [
+                    l for l in self.directory.locations(object_id)
+                    if l.progress is Progress.COMPLETE
+                ]
+                if locs:
+                    break
+                ev = self.sim.event()
+                cb = lambda _o: ev.succeed()
+                self.directory.subscribe(object_id, cb)
+                yield ev
+                self.directory.unsubscribe(object_id, cb)
+            loc = locs[0]  # always the producer: no relay through receivers
+            size = self.directory.size_of(object_id)
+            if loc.node == node:
+                return self.c.nodes[node].buffers[object_id]
+            src_buf = self.c.nodes[loc.node].buffers[object_id]
+            dst_buf = self.c.new_buffer(node, object_id, size, src_buf.content)
+            yield self.sim.timeout(self.spec.link.latency)
+            yield self.c.net_stream(loc.node, node, src_buf, dst_buf)
+            dst_buf.merge_content(src_buf.content)
+            if to_executor:
+                exec_buf = SimBuffer(self.sim, object_id + "#exec", size)
+                yield self.c.mem_stream(node, dst_buf, exec_buf)  # serialized copy
+            return dst_buf
+
+        return self.sim.process(proc())
+
+    def reduce(self, node: int, target_id: str, source_ids: Dict[str, int], size: int) -> Event:
+        """Ray has no Reduce: the consumer task gathers all inputs and adds
+        them locally (exactly what apply_gradient does in Figure 1b)."""
+
+        def proc():
+            gets = [self.get(node, oid, to_executor=False) for oid in source_ids]
+            yield self.sim.all_of(gets)
+            content = frozenset()
+            for oid in source_ids:
+                buf = self.c.nodes[node].buffers.get(oid)
+                content = content | (buf.content if buf else frozenset([oid]))
+                yield self.c.nodes[node].mem.serve(size / self.spec.reduce_bandwidth)
+            out = self.c.new_buffer(node, target_id, size, content)
+            out.fill(content)
+            self.directory.publish_complete(target_id, node, size)
+            return out
+
+        return self.sim.process(proc())

@@ -1,0 +1,157 @@
+"""Per-node object store (paper sections 3-4).
+
+Each node buffers a set of application objects as chunked byte buffers.
+Objects created locally via Put are *pinned* until Delete (paper section 7:
+"the object copy that is created will be pinned in its local store until
+the framework calls Delete").  Copies pulled from remote nodes are
+unpinned and evictable under a local LRU policy.
+
+The store tracks per-object progress (bytes received) so a partial copy
+can serve as an upstream sender without ever forwarding bytes it does not
+yet hold (pipelining, section 4.2).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.api import DEFAULT_CHUNK_SIZE, ObjectAlreadyExists
+
+
+class ChunkedBuffer:
+    """A byte buffer assembled chunk-by-chunk.
+
+    Backed by a numpy uint8 array.  ``bytes_present`` advances monotonically
+    (chunks arrive in order within one transfer, which is how TCP -- and our
+    chunk pipeline -- deliver them).
+    """
+
+    def __init__(self, size: int, chunk_size: int = DEFAULT_CHUNK_SIZE):
+        self.size = size
+        self.chunk_size = chunk_size
+        self.data = np.zeros(size, dtype=np.uint8)
+        self.bytes_present = 0
+
+    @classmethod
+    def from_bytes(cls, payload: bytes, chunk_size: int = DEFAULT_CHUNK_SIZE) -> "ChunkedBuffer":
+        buf = cls(len(payload), chunk_size)
+        buf.data[:] = np.frombuffer(payload, dtype=np.uint8)
+        buf.bytes_present = len(payload)
+        return buf
+
+    @classmethod
+    def from_array(cls, arr: np.ndarray, chunk_size: int = DEFAULT_CHUNK_SIZE) -> "ChunkedBuffer":
+        raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        buf = cls(raw.size, chunk_size)
+        buf.data[:] = raw
+        buf.bytes_present = raw.size
+        return buf
+
+    @property
+    def complete(self) -> bool:
+        return self.bytes_present >= self.size
+
+    def num_chunks(self) -> int:
+        return max(1, -(-self.size // self.chunk_size))
+
+    def write_chunk(self, offset: int, payload: np.ndarray) -> None:
+        end = offset + payload.size
+        self.data[offset:end] = payload
+        self.bytes_present = max(self.bytes_present, end)
+
+    def read_chunk(self, index: int) -> np.ndarray:
+        lo = index * self.chunk_size
+        hi = min(self.size, lo + self.chunk_size)
+        assert hi <= self.bytes_present, "pipelining invariant violated"
+        return self.data[lo:hi]
+
+    def available_chunks(self) -> int:
+        if self.complete:
+            return self.num_chunks()
+        return self.bytes_present // self.chunk_size
+
+    def to_array(self, dtype, shape) -> np.ndarray:
+        assert self.complete
+        return self.data.view(dtype).reshape(shape)
+
+    def to_bytes(self) -> bytes:
+        assert self.complete
+        return self.data.tobytes()
+
+
+class NodeStore:
+    """Object store for a single node."""
+
+    def __init__(self, node_id: int, capacity_bytes: Optional[int] = None):
+        self.node_id = node_id
+        self.capacity_bytes = capacity_bytes
+        self.objects: Dict[str, ChunkedBuffer] = {}
+        self.pinned: set = set()
+        self._lru = collections.OrderedDict()  # unpinned object id -> size
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(b.size for b in self.objects.values())
+
+    def _touch(self, object_id: str) -> None:
+        if object_id in self._lru:
+            self._lru.move_to_end(object_id)
+
+    def _maybe_evict(self, incoming: int) -> None:
+        """Local LRU over unpinned copies (paper section 7: 'Hoplite is free
+        to evict any additional copies ... local LRU policy per node')."""
+        if self.capacity_bytes is None:
+            return
+        while self.used_bytes + incoming > self.capacity_bytes and self._lru:
+            victim, _ = self._lru.popitem(last=False)
+            self.objects.pop(victim, None)
+
+    # -- creation -----------------------------------------------------------
+
+    def create(self, object_id: str, size: int, *, pinned: bool, chunk_size: int = DEFAULT_CHUNK_SIZE) -> ChunkedBuffer:
+        if object_id in self.objects:
+            existing = self.objects[object_id]
+            if existing.size != size:
+                raise ObjectAlreadyExists(object_id)
+            return existing
+        self._maybe_evict(size)
+        buf = ChunkedBuffer(size, chunk_size)
+        self.objects[object_id] = buf
+        if pinned:
+            self.pinned.add(object_id)
+        else:
+            self._lru[object_id] = size
+        return buf
+
+    def put_array(self, object_id: str, arr: np.ndarray, chunk_size: int = DEFAULT_CHUNK_SIZE) -> ChunkedBuffer:
+        buf = ChunkedBuffer.from_array(arr, chunk_size)
+        if object_id in self.objects:
+            existing = self.objects[object_id]
+            if existing.complete and not np.array_equal(existing.data, buf.data):
+                raise ObjectAlreadyExists(object_id)
+        self._maybe_evict(buf.size)
+        self.objects[object_id] = buf
+        self.pinned.add(object_id)
+        self._lru.pop(object_id, None)
+        return buf
+
+    # -- access ---------------------------------------------------------------
+
+    def get(self, object_id: str) -> Optional[ChunkedBuffer]:
+        buf = self.objects.get(object_id)
+        if buf is not None:
+            self._touch(object_id)
+        return buf
+
+    def contains(self, object_id: str) -> bool:
+        return object_id in self.objects
+
+    def delete(self, object_id: str) -> None:
+        self.objects.pop(object_id, None)
+        self.pinned.discard(object_id)
+        self._lru.pop(object_id, None)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function here defines the exact numerical contract its kernel must
+match (tests assert allclose over shape/dtype sweeps in interpret mode).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)   (q heads already expanded)
+    k: jax.Array,  # (B, Kh, Skv, D)
+    v: jax.Array,  # (B, Kh, Skv, D)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Plain softmax attention with GQA head-group mapping.
+
+    q head h attends kv head h // (H // Kh).  Positions: query i sits at
+    global position q_offset + i; kv j at position j.
+    """
+    B, H, Sq, D = q.shape
+    Kh = k.shape[1]
+    G = H // Kh
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhsd->bhqs", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / math.sqrt(D)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[2])
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (window start-up) produce uniform p; zero them
+    any_valid = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqs,bhsd->bhqd", p, vf.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)
+
+
+def chunk_reduce_ref(dst: jax.Array, src: jax.Array, alpha: float = 1.0) -> jax.Array:
+    """Hoplite chain-hop streaming accumulate: dst + alpha * src (f32 acc)."""
+    return (dst.astype(jnp.float32) + alpha * src.astype(jnp.float32)).astype(dst.dtype)
+
+
+def dequant_add_ref(dst: jax.Array, q: jax.Array, scale: jax.Array, block: int) -> jax.Array:
+    """Accumulate an int8 block-quantized payload: dst + dequant(q, scale).
+
+    q: int8 flat array padded to a multiple of ``block``; scale: per-block
+    f32 scales.  Matches optim/compression.py's layout.
+    """
+    deq = q.astype(jnp.float32).reshape(-1, block) * scale[:, None]
+    deq = deq.reshape(-1)[: dst.size].reshape(dst.shape)
+    return (dst.astype(jnp.float32) + deq).astype(dst.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )

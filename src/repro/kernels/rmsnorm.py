@@ -1,0 +1,51 @@
+"""Pallas fused RMSNorm: one HBM round trip per row tile.
+
+Unfused, rmsnorm reads x twice (square-mean, then scale) and writes twice;
+fused it is a single (rows, d) VMEM tile pass.  Rows are tiled ``block_rows``
+at a time; d stays whole per tile (d <= 8192 fits VMEM comfortably at
+bf16 with 256 rows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (rows, d)
+    w = w_ref[...].astype(jnp.float32)  # (d,)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * (1.0 + w)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., d)
+    w: jax.Array,  # (d,)
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    d = x.shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    grid = (xf.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    return out[:rows].reshape(x.shape)

@@ -1,0 +1,309 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any program
+built on lax.scan (layer stacks, microbatch accumulation, flash-attention
+block loops) is undercounted by orders of magnitude.  XLA annotates
+loops with ``backend_config={"known_trip_count":{"n":...}}`` after loop
+analysis; this walker parses the compiled HLO text, builds the call graph
+(fusion `calls=`, while `body=`/`condition=`, `call`/`conditional`), and
+aggregates per-device costs with loop multipliers:
+
+  * flops  -- 2 * prod(out_dims) * prod(contracting_dims) per `dot`
+              (+1 flop/elem for fusion outputs as the elementwise term);
+  * bytes  -- post-fusion HBM traffic model: operand+result bytes at
+              fusion/dot/copy/slice/gather/... boundaries (ops *inside* a
+              fusion touch registers, not HBM);
+  * collective bytes -- per kind, with ring-algorithm link-byte factors,
+              each multiplied by the loop trip product of its call site.
+
+This is the measurement backbone of EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# op kinds whose operands/results cross HBM (post-fusion boundary model)
+_HBM_OPS = (
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "reduce", "transpose",
+    "broadcast", "concatenate", "pad", "reverse", "sort", "iota",
+    "rng-bit-generator", "select-and-scatter", "reduce-window", "custom-call",
+) + COLLECTIVES
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+class _Op:
+    __slots__ = ("name", "kind", "type_str", "line", "operands")
+
+    def __init__(self, name, kind, type_str, line, operands):
+        self.name, self.kind, self.type_str, self.line, self.operands = (
+            name, kind, type_str, line, operands,
+        )
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            cur = hdr.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # rest: "f32[4,256]{1,0} dot(%a, %b), ..." or a tuple type
+        # "(s32[], f32[4,256]{1,0}) while(%tuple), ..." -- parse the type
+        # as a balanced-paren prefix.
+        if rest.startswith("("):
+            depth = 0
+            split_at = -1
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        split_at = i + 1
+                        break
+            if split_at < 0:
+                continue
+            type_str = rest[:split_at]
+            opcall = rest[split_at:].lstrip()
+        else:
+            parts = rest.split(" ", 1)
+            if len(parts) < 2:
+                continue
+            type_str, opcall = parts
+        kind = opcall.split("(")[0].strip()
+        ops_m = _OPERANDS_RE.search(opcall)
+        operands = (
+            [o.strip().lstrip("%") for o in ops_m.group(1).replace("%", "").split(",")]
+            if ops_m
+            else []
+        )
+        comps[cur].append(_Op(name, kind, type_str, line, operands))
+    return comps
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    out = _first_shape(op.type_str)
+    if out is None:
+        return 0.0
+    _dt, out_dims = out
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    k = 1
+    cm = _CONTRACT_RE.search(op.line)
+    if cm and op.operands:
+        lhs_type = symbols.get(op.operands[0])
+        if lhs_type:
+            sh = _first_shape(lhs_type)
+            if sh:
+                dims = sh[1]
+                idxs = cm.group(1)
+                if idxs:
+                    for i in idxs.split(","):
+                        ii = int(i)
+                        if ii < len(dims):
+                            k *= dims[ii]
+    return 2.0 * out_elems * k
+
+
+def _collective_link_bytes(op: _Op) -> Tuple[str, float]:
+    size = _shape_bytes(op.type_str)
+    g = _GROUPS_RE.search(op.line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.line)
+        n = int(gi.group(2)) if gi else 2
+    kind = op.kind
+    if kind.startswith("all-reduce"):
+        link = 2 * size * (n - 1) / max(1, n)
+    elif kind.startswith("all-gather"):
+        link = size * (n - 1) / max(1, n)
+    elif kind.startswith("reduce-scatter"):
+        link = size * (n - 1)
+    elif kind.startswith("all-to-all"):
+        link = size * (n - 1) / max(1, n)
+    else:
+        link = size
+    return kind.rstrip("-start").rstrip("-done"), link
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = _parse_computations(hlo_text)
+        self._memo: Dict[str, Dict] = {}
+        # symbol tables per computation: opname -> type string
+        self.symbols = {
+            cname: {op.name: op.type_str for op in ops}
+            for cname, ops in self.comps.items()
+        }
+        self.entry = self._find_entry(hlo_text)
+
+    def _find_entry(self, hlo: str) -> str:
+        for line in hlo.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    return m.group(1)
+        # fallback: computation named main-ish
+        for name in self.comps:
+            if "main" in name:
+                return name
+        return next(iter(self.comps))
+
+    def cost(self, comp: Optional[str] = None) -> Dict:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = {"flops": 0.0, "bytes": 0.0, "collectives": {}, "coll_total": 0.0}
+        # memoize early to guard cycles (should not happen in HLO)
+        self._memo[comp] = total
+        symbols = self.symbols.get(comp, {})
+        for op in self.comps.get(comp, []):
+            kind = op.kind
+            if kind.startswith("while"):
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                if bm and bm.group(1) in self.comps:
+                    sub = self.cost(bm.group(1))
+                    self._add(total, sub, trips)
+                continue
+            if kind.startswith(("call", "conditional")):
+                cm = _CALLS_RE.search(op.line) or _BODY_RE.search(op.line)
+                names = re.findall(r"(?:branch_computations=\{|calls=|to_apply=)%?([\w.\-]+)", op.line)
+                for nm in names:
+                    if nm in self.comps:
+                        self._add(total, self.cost(nm), 1)
+                continue
+            base = kind.split(".")[0]
+            if base.startswith(COLLECTIVES):
+                ckind, link = _collective_link_bytes(op)
+                total["collectives"][ckind] = total["collectives"].get(ckind, 0.0) + link
+                total["coll_total"] += link
+                total["bytes"] += _shape_bytes(op.type_str)
+                continue
+            if base == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                if cm and cm.group(1) in self.comps:
+                    # dots inside the fusion still burn MXU flops; internal
+                    # elementwise traffic stays in registers/VMEM.
+                    sub = self._fusion_flops(cm.group(1))
+                    total["flops"] += sub
+                # boundary traffic: operands + result
+                total["bytes"] += _shape_bytes(op.type_str)
+                for o in op.operands:
+                    t = symbols.get(o)
+                    if t:
+                        total["bytes"] += _shape_bytes(t)
+                # elementwise term: 1 flop per output element
+                total["flops"] += _shape_bytes(op.type_str) / 4.0
+                continue
+            if base == "dot":
+                total["flops"] += _dot_flops(op, symbols)
+                total["bytes"] += _shape_bytes(op.type_str)
+                for o in op.operands:
+                    t = symbols.get(o)
+                    if t:
+                        total["bytes"] += _shape_bytes(t)
+                continue
+            if base in ("copy", "dynamic-slice", "dynamic-update-slice", "gather",
+                        "scatter", "reduce", "transpose", "broadcast", "concatenate",
+                        "pad", "reverse", "sort", "custom-call", "iota",
+                        "rng-bit-generator"):
+                total["bytes"] += _shape_bytes(op.type_str)
+                for o in op.operands:
+                    t = symbols.get(o)
+                    if t:
+                        total["bytes"] += _shape_bytes(t)
+        return total
+
+    def _fusion_flops(self, comp: str) -> float:
+        """Sum dot flops inside a fused computation (recursively)."""
+        f = 0.0
+        symbols = self.symbols.get(comp, {})
+        for op in self.comps.get(comp, []):
+            if op.kind.split(".")[0] == "dot":
+                f += _dot_flops(op, symbols)
+            cm = _CALLS_RE.search(op.line)
+            if cm and cm.group(1) in self.comps and cm.group(1) != comp:
+                f += self._fusion_flops(cm.group(1))
+        return f
+
+    def _add(self, total: Dict, sub: Dict, mult: int):
+        total["flops"] += sub["flops"] * mult
+        total["bytes"] += sub["bytes"] * mult
+        total["coll_total"] += sub["coll_total"] * mult
+        for k, v in sub["collectives"].items():
+            total["collectives"][k] = total["collectives"].get(k, 0.0) + v * mult
+
+
+def analyze(hlo_text: str) -> Dict:
+    hc = HloCost(hlo_text)
+    out = hc.cost()
+    return {
+        "flops": out["flops"],
+        "bytes": out["bytes"],
+        "collective_link_bytes": out["coll_total"],
+        "collectives_by_kind": out["collectives"],
+    }

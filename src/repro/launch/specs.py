@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run step 2).
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable abstract
+values -- no device allocation.  For [vlm]/[audio] archs the modality
+frontend is a stub: the specs provide precomputed patch/frame embeddings
+(positions_3d streams for M-RoPE, encoder frames for whisper).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.train import step as train_step_mod
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.rope == "mrope":
+        out["positions_3d"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeSpec):
+    """(abstract_params, abstract_batch) for the prefill path."""
+    params = train_step_mod.abstract_state(cfg)["params"]
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return params, batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec):
+    """(params, token, t, caches) abstract inputs for serve_step."""
+    params = train_step_mod.abstract_state(cfg)["params"]
+    B = shape.global_batch
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    caches = T.cache_skel(cfg, B, shape.seq_len)
+    return params, token, t, caches
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeSpec):
+    state = train_step_mod.abstract_state(cfg)
+    batch = train_batch_specs(cfg, shape)
+    return state, batch

@@ -1,0 +1,11 @@
+"""Mini task-based distributed framework (the "Ray" above Hoplite).
+
+Provides dynamic tasks returning futures (paper Figure 1b), executed by a
+pool of per-node executors over a LocalCluster object store.  Group
+communication (broadcast / reduce) is *not* expressed by the application;
+it emerges from Get/Reduce calls exactly as in the paper.
+"""
+
+from repro.runtime.runtime import ObjectRef, Runtime, TaskError
+
+__all__ = ["ObjectRef", "Runtime", "TaskError"]

@@ -1,0 +1,206 @@
+"""Dynamic-task runtime over the Hoplite object store.
+
+Semantics follow the paper's framing of Ray:
+
+  * ``runtime.remote(fn, *args)`` submits a task and immediately returns an
+    ``ObjectRef`` future; the scheduler places it on an executor node.
+  * ObjectRef arguments are resolved via Hoplite ``Get`` on the executing
+    node -- when many tasks consume the same ref, the receiver-driven
+    broadcast tree emerges with zero application involvement.
+  * ``runtime.reduce(refs, op)`` is the annotated reduce of section 2.3
+    (``@ray.remote(reduce=True)``): Hoplite chains the inputs dynamically.
+  * ``runtime.wait(refs, num_returns=k)`` returns the first k finished refs
+    -- the primitive that makes asynchronous PS / RL loops expressible.
+  * Lineage-based recovery (section 7): every ref records its producing
+    task; if all copies of an object are lost to node failures, the task
+    re-executes (transitively re-fetching / re-creating its inputs).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.api import ObjectLost, ReduceOp, SUM
+from repro.core.local import DeadNode, LocalCluster
+
+
+class TaskError(RuntimeError):
+    pass
+
+
+class ObjectRef:
+    _ids = itertools.count()
+
+    def __init__(self, runtime: "Runtime", object_id: Optional[str] = None):
+        self.id = object_id or f"ref-{next(ObjectRef._ids)}"
+        self._runtime = runtime
+        self.ready = threading.Event()
+        self.error: Optional[BaseException] = None
+
+    def __repr__(self):
+        return f"ObjectRef({self.id}, ready={self.ready.is_set()})"
+
+
+class Runtime:
+    """A pool of per-node executors + scheduler + lineage table."""
+
+    def __init__(
+        self,
+        num_nodes: int = 4,
+        executors_per_node: int = 2,
+        cluster: Optional[LocalCluster] = None,
+        seed: int = 0,
+    ):
+        self.cluster = cluster or LocalCluster(num_nodes)
+        self.num_nodes = self.cluster.num_nodes
+        self._rng = np.random.RandomState(seed)
+        self._rr = itertools.count()
+        self._lineage: Dict[str, Tuple[Callable, tuple, dict, int]] = {}
+        self._refs: Dict[str, ObjectRef] = {}
+        self._lock = threading.RLock()
+        self._sema = [threading.Semaphore(executors_per_node) for _ in range(self.num_nodes)]
+        self.tasks_executed = 0
+        self.tasks_reexecuted = 0
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _pick_node(self, node: Optional[int]) -> int:
+        if node is not None:
+            return node
+        alive = [i for i in range(self.num_nodes) if i not in self.cluster.dead]
+        return alive[next(self._rr) % len(alive)]
+
+    # -- task submission ------------------------------------------------------
+
+    def remote(
+        self, fn: Callable, *args, node: Optional[int] = None, **kwargs
+    ) -> ObjectRef:
+        """Submit ``fn(*args)``; ObjectRef args are fetched via Hoplite."""
+        ref = ObjectRef(self)
+        node = self._pick_node(node)
+        with self._lock:
+            self._lineage[ref.id] = (fn, args, kwargs, node)
+            self._refs[ref.id] = ref
+        t = threading.Thread(
+            target=self._execute, args=(ref, fn, args, kwargs, node), daemon=True
+        )
+        t.start()
+        return ref
+
+    def put(self, value: np.ndarray, node: Optional[int] = None) -> ObjectRef:
+        ref = ObjectRef(self)
+        node = self._pick_node(node)
+        self.cluster.put(node, ref.id, np.asarray(value))
+        with self._lock:
+            self._refs[ref.id] = ref
+        ref.ready.set()
+        return ref
+
+    def _resolve(self, arg, node: int):
+        if isinstance(arg, ObjectRef):
+            return self.get(arg, node=node)
+        return arg
+
+    def _execute(self, ref: ObjectRef, fn, args, kwargs, node: int):
+        with self._sema[node]:
+            try:
+                resolved = [self._resolve(a, node) for a in args]
+                rkw = {k: self._resolve(v, node) for k, v in kwargs.items()}
+                out = fn(*resolved, **rkw)
+                self.cluster.put(node, ref.id, np.asarray(out))
+            except BaseException as e:  # noqa: BLE001
+                ref.error = e
+            finally:
+                self.tasks_executed += 1
+                ref.ready.set()
+
+    # -- data access ------------------------------------------------------------
+
+    def get(self, ref: ObjectRef, node: int = 0, timeout: float = 60.0):
+        """Hoplite Get with lineage reconstruction on ObjectLost."""
+        deadline = time.time() + timeout
+        ref.ready.wait(timeout=timeout)
+        if ref.error is not None:
+            raise TaskError(str(ref.error)) from ref.error
+        for attempt in range(3):
+            try:
+                return self.cluster.get(
+                    node, ref.id, timeout=max(0.1, deadline - time.time())
+                )
+            except (ObjectLost, TimeoutError):
+                if not self._reconstruct(ref.id, node):
+                    raise
+        raise TaskError(f"unable to reconstruct {ref.id}")
+
+    def _reconstruct(self, object_id: str, node: int) -> bool:
+        """Re-execute the producing task of a lost object (section 7)."""
+        with self._lock:
+            entry = self._lineage.get(object_id)
+            ref = self._refs.get(object_id)
+        if entry is None or ref is None:
+            return False
+        fn, args, kwargs, orig_node = entry
+        exec_node = orig_node if orig_node not in self.cluster.dead else self._pick_node(None)
+        self.tasks_reexecuted += 1
+        ref.ready.clear()
+        self._execute(ref, fn, args, kwargs, exec_node)
+        return ref.error is None
+
+    # -- group communication -------------------------------------------------------
+
+    def wait(
+        self, refs: Sequence[ObjectRef], num_returns: int = 1, timeout: float = 60.0
+    ) -> Tuple[List[ObjectRef], List[ObjectRef]]:
+        """First-k-finishers (the dynamic-group primitive, Figure 1b)."""
+        deadline = time.time() + timeout
+        done: List[ObjectRef] = []
+        rest = list(refs)
+        while len(done) < num_returns and time.time() < deadline:
+            for r in list(rest):
+                if r.ready.is_set():
+                    done.append(r)
+                    rest.remove(r)
+                    if len(done) >= num_returns:
+                        break
+            if len(done) < num_returns:
+                time.sleep(0.001)
+        return done, rest
+
+    def reduce(
+        self,
+        refs: Sequence[ObjectRef],
+        op: ReduceOp = SUM,
+        node: Optional[int] = None,
+        timeout: float = 60.0,
+    ) -> ObjectRef:
+        """Annotated reduce: Hoplite chains the sources dynamically."""
+        node = self._pick_node(node)
+        out = ObjectRef(self)
+        with self._lock:
+            self._refs[out.id] = out
+
+        def run():
+            try:
+                for r in refs:
+                    r.ready.wait(timeout=timeout)
+                    if r.error is not None:
+                        raise TaskError(str(r.error))
+                self.cluster.reduce(node, out.id, [r.id for r in refs], op, timeout=timeout)
+            except BaseException as e:  # noqa: BLE001
+                out.error = e
+            finally:
+                out.ready.set()
+
+        threading.Thread(target=run, daemon=True).start()
+        return out
+
+    def delete(self, refs: Sequence[ObjectRef]):
+        for r in refs:
+            self.cluster.delete(r.id)
+            with self._lock:
+                self._lineage.pop(r.id, None)

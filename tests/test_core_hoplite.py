@@ -1,0 +1,224 @@
+"""Unit + behaviour tests for the Hoplite core: directory, planner,
+chain state machine, simulator protocols, threaded cluster, fault
+tolerance (system spec deliverable c)."""
+
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.api import ObjectLost, fresh_object_id
+from repro.core.directory import ObjectDirectory, ReplicatedDirectory
+from repro.core.local import LocalCluster
+from repro.core.planner import EC2_LINK, LinkSpec
+from repro.core.scheduler import ChainState, partition_groups
+from repro.core.simulation import ClusterSpec, Hoplite, MPIStyle, RayStyle, SimCluster
+
+
+# ---------------------------------------------------------------------------
+# planner (Appendix A)
+# ---------------------------------------------------------------------------
+
+
+def test_chain_condition_paper_example():
+    """Paper 6.1: B=10Gb/s, L=125us -> for 1MB objects, 2-D when n > 6."""
+    S = 1 << 20
+    assert not planner.use_two_dimensional(6, EC2_LINK, S)
+    assert planner.use_two_dimensional(7, EC2_LINK, S)
+
+
+def test_chain_times_monotonic():
+    link = EC2_LINK
+    S = 64 << 20
+    assert planner.t_1d(4, link, S) < planner.t_1d(16, link, S)
+    # large objects: 1-D beats 2-D (latency amortized)
+    assert planner.t_1d(16, link, S) < planner.t_2d(16, link, S)
+
+
+def test_plan_reduce_recursion_depth():
+    link = LinkSpec(bandwidth=1.25e9, latency=125e-6)
+    plan = planner.plan_reduce(range(256), link, 1 << 10)  # tiny: deep split
+    assert planner.plan_depth(plan) >= 1
+    assert planner.max_chain_length(plan) <= 17  # ~sqrt(256)+1
+    flat = planner.plan_reduce(range(8), link, 1 << 30)  # huge: flat chain
+    assert flat.is_flat
+
+
+# ---------------------------------------------------------------------------
+# directory
+# ---------------------------------------------------------------------------
+
+
+def test_directory_prefers_complete_and_checks_out():
+    d = ObjectDirectory()
+    d.publish_partial("x", node=1, size=100)
+    d.publish_complete("x", node=2, size=100)
+    loc = d.checkout_location("x")
+    assert loc.node == 2  # complete preferred
+    loc2 = d.checkout_location("x")
+    assert loc2.node == 1  # 2 is checked out -> partial copy serves
+    assert d.checkout_location("x") is None
+    d.return_location("x", 2)
+    assert d.checkout_location("x").node == 2
+
+
+def test_directory_failover_replica():
+    d = ReplicatedDirectory(num_replicas=1)
+    d.publish_complete("x", node=3, size=10)
+    d.fail_primary()
+    assert any(l.node == 3 for l in d.locations("x"))
+
+
+def test_directory_orphan_detection():
+    d = ObjectDirectory()
+    d.publish_complete("x", 0, 10)
+    d.publish_complete("x", 1, 10)
+    assert d.fail_node(0) == []
+    assert d.fail_node(1) == ["x"]
+
+
+# ---------------------------------------------------------------------------
+# chain state machine (paper worked example)
+# ---------------------------------------------------------------------------
+
+
+def test_chain_state_paper_example():
+    """Objects a,b,c,d on nodes A(0),B(1),C(2),D(3); receiver D; arrival
+    a,d,c,b => hops A->C, C->B, B->D (paper section 4.3)."""
+    chain = ChainState(receiver_node=3, tag="t")
+    assert chain.on_ready(0, "a") is None  # a: becomes tail
+    assert chain.on_ready(3, "d") is None  # d at receiver: folds at end
+    hop1 = chain.on_ready(2, "c")
+    assert (hop1.src_node, hop1.dst_node) == (0, 2)  # A -> C
+    hop2 = chain.on_ready(1, "b")
+    assert (hop2.src_node, hop2.dst_node) == (2, 1)  # C -> B
+    final = chain.final_hop("out")
+    assert (final.src_node, final.dst_node) == (1, 3)  # B -> D
+    assert chain.local_objects == ["d"]
+
+
+def test_partition_groups_covers_all():
+    groups = partition_groups(list(range(17)))
+    flat = sorted(x for g in groups for x in g)
+    assert flat == list(range(17))
+    assert len(groups) == 4  # ~sqrt(17)
+
+
+# ---------------------------------------------------------------------------
+# simulator protocol behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_sim_broadcast_content_and_relay():
+    c = SimCluster(ClusterSpec(num_nodes=8))
+    h = Hoplite(c)
+    oid = fresh_object_id()
+    h.put(0, oid, 64 << 20)
+    c.sim.run()
+    for i in range(1, 8):
+        h.get(i, oid, to_executor=False)
+    c.sim.run()
+    for i in range(1, 8):
+        buf = c.nodes[i].buffers[oid]
+        assert buf.complete and buf.content == frozenset([oid])
+    # pipelined relay: completion far below store-and-forward binomial
+    assert c.sim.now < MPIStyle(SimCluster()).bcast_time(8, 64 << 20)
+
+
+def test_sim_reduce_all_contributions_any_order():
+    c = SimCluster(ClusterSpec(num_nodes=16))
+    h = Hoplite(c)
+    oids = {}
+    for i in range(16):
+        oid = fresh_object_id()
+        # staggered arrival, reverse order
+        c.sim.schedule((15 - i) * 0.01, lambda i=i, oid=oid: h.put(i, oid, 1 << 20))
+        oids[oid] = i
+    done = h.reduce(0, "target", oids, 1 << 20)
+    c.sim.run()
+    buf = c.nodes[0].buffers["target"]
+    assert buf.complete and buf.content == frozenset(oids)
+
+
+def test_sim_hoplite_beats_ray_broadcast_16n():
+    def bcast(api_cls):
+        c = SimCluster()
+        api = api_cls(c)
+        oid = fresh_object_id()
+        api.put(0, oid, 256 << 20)
+        c.sim.run()
+        t0 = c.sim.now
+        for i in range(1, 16):
+            api.get(i, oid, to_executor=False)
+        c.sim.run()
+        return c.sim.now - t0
+
+    assert bcast(Hoplite) * 3 < bcast(RayStyle)
+
+
+def test_sim_asynchrony_tracks_last_arrival():
+    """Hoplite broadcast latency ~ last arrival + S/B regardless of order."""
+    c = SimCluster()
+    h = Hoplite(c)
+    oid = fresh_object_id()
+    h.put(0, oid, 1 << 30)
+    c.sim.run()
+    interval = 0.5
+    for i in range(1, 16):
+        c.sim.schedule(i * interval, lambda i=i: h.get(i, oid, to_executor=False))
+    c.sim.run()
+    last_arrival = 15 * interval
+    s_over_b = (1 << 30) / c.spec.link.bandwidth
+    assert c.sim.now < last_arrival + 1.5 * s_over_b
+
+
+# ---------------------------------------------------------------------------
+# threaded cluster: real bytes
+# ---------------------------------------------------------------------------
+
+
+def test_local_broadcast_relay_and_bytes():
+    c = LocalCluster(8, chunk_size=8192, pace=0.0002)
+    x = np.random.RandomState(0).rand(300_000).astype(np.float32)
+    c.put(0, "x", x)
+    futs = [c.get_async(i, "x") for i in range(1, 8)]
+    for f in futs:
+        np.testing.assert_array_equal(f.result(timeout=60), x)
+    # one-outbound cap: no node sends more than ~2 object copies
+    assert max(c.bytes_sent_per_node) <= 2 * x.nbytes
+
+
+def test_local_reduce_exact():
+    c = LocalCluster(8)
+    vals = [np.random.RandomState(i).rand(10_000) for i in range(8)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    c.reduce(2, "sum", [f"g{i}" for i in range(8)])
+    np.testing.assert_allclose(c.get(2, "sum"), sum(vals), rtol=1e-12)
+
+
+def test_local_small_object_inline():
+    c = LocalCluster(2)
+    x = np.arange(100, dtype=np.int32)  # 400 B < 64 KB -> inline fast path
+    c.put(0, "small", x)
+    assert c.directory.get_inline("small") is not None
+    np.testing.assert_array_equal(c.get(1, "small"), x)
+
+
+def test_local_failure_refetch_and_orphan():
+    c = LocalCluster(4, pace=0.0002)
+    x = np.random.RandomState(1).rand(100_000).astype(np.float32)
+    c.put(0, "x", x)
+    c.get(1, "x")
+    c.fail_node(0)  # copy survives at node 1
+    np.testing.assert_array_equal(c.get(2, "x", timeout=30), x)
+    c.fail_node(1), c.fail_node(2)
+    with pytest.raises((ObjectLost, TimeoutError)):
+        c.get(3, "x", timeout=0.5)
+
+
+def test_local_delete_pins_semantics():
+    c = LocalCluster(2, store_capacity=1 << 20)
+    big = np.zeros(200_000, np.float32)  # 800KB
+    c.put(0, "a", big)
+    c.delete("a")
+    assert not c.stores[0].contains("a")

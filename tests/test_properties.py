@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner
+from repro.core.api import fresh_object_id
+from repro.core.local import LocalCluster
+from repro.core.planner import LinkSpec
+from repro.core.scheduler import ChainState, partition_groups
+from repro.core.simulation import ClusterSpec, Hoplite, SimCluster
+from repro.optim.compression import (
+    compress_decompress,
+    dequantize_int8,
+    ef_sync,
+    init_residuals,
+    quantize_int8,
+)
+
+
+# ---------------------------------------------------------------------------
+# reduce correctness is invariant to arrival order (the paper's core claim)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    order=st.randoms(use_true_random=False),
+    size=st.sampled_from([1 << 12, 1 << 20]),
+)
+def test_sim_reduce_any_arrival_order(n, order, size):
+    c = SimCluster(ClusterSpec(num_nodes=max(n, 4)))
+    h = Hoplite(c)
+    oids = {}
+    delays = list(range(n))
+    order.shuffle(delays)
+    for i in range(n):
+        oid = fresh_object_id()
+        c.sim.schedule(delays[i] * 0.003, lambda i=i, oid=oid: h.put(i, oid, size))
+        oids[oid] = i
+    h.reduce(0, "t", oids, size)
+    c.sim.run()
+    buf = c.nodes[0].buffers["t"]
+    assert buf.complete
+    assert buf.content == frozenset(oids), "a contribution was lost or duplicated"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+    elems=st.integers(100, 5000),
+)
+def test_local_reduce_exact_sum_property(n, seed, elems):
+    rng = np.random.RandomState(seed)
+    c = LocalCluster(n)
+    vals = [rng.rand(elems) for _ in range(n)]
+    for i, v in enumerate(vals):
+        c.put(i, f"o{i}", v)
+    c.reduce(rng.randint(n), "sum", [f"o{i}" for i in range(n)])
+    got = c.get(rng.randint(n), "sum")
+    np.testing.assert_allclose(got, sum(vals), rtol=1e-11)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40))
+def test_partition_groups_is_a_partition(n):
+    items = list(range(n))
+    groups = partition_groups(items)
+    flat = sorted(x for g in groups for x in g)
+    assert flat == items
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 1024),
+    bw=st.floats(1e8, 1e11),
+    lat=st.floats(1e-6, 1e-3),
+    size=st.integers(1, 1 << 32),
+)
+def test_planner_picks_min_time(n, bw, lat, size):
+    """The nBL>S rule must agree with argmin(T_1d, T_2d) up to the paper's
+    sqrt approximation ((sqrt n - 1)^2 ~ n)."""
+    link = LinkSpec(bw, lat)
+    t1, t2 = planner.t_1d(n, link, size), planner.t_2d(n, link, size)
+    chose_2d = planner.use_two_dimensional(n, link, size)
+    if chose_2d:
+        assert t2 <= t1 * 1.5 + 4 * lat
+    else:
+        assert t1 <= t2 * 1.1 + 4 * lat
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 4000))
+def test_int8_quantization_bounded_error(seed, n):
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(n) * rng.rand()).astype(np.float32)
+    import jax.numpy as jnp
+
+    y = np.asarray(compress_decompress(jnp.asarray(x)))
+    block_max = np.abs(x).max() if n else 0.0
+    # blockwise symmetric int8: error bounded by scale/2 per element
+    q, s = quantize_int8(jnp.asarray(x))
+    scales = np.repeat(np.asarray(s), 256)[: len(x)]
+    assert np.all(np.abs(y - x) <= scales / 2 + 1e-7)
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of EF-compressed transmissions converges to the sum of true
+    gradients (the EF-SGD telescoping property)."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    grads = [jnp.asarray(rng.randn(512).astype(np.float32)) for _ in range(30)]
+    res = init_residuals(grads[0])
+    sent_total = np.zeros(512, np.float32)
+    true_total = np.zeros(512, np.float32)
+    for g in grads:
+        sent, res = ef_sync(g, res, sync_fn=lambda x: x)
+        sent_total += np.asarray(sent)
+        true_total += np.asarray(g)
+    resid = np.abs(sent_total - true_total).max()
+    # remaining bias is exactly the last residual, bounded by one quantum
+    assert resid <= np.abs(np.asarray(res)).max() + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    arrivals=st.lists(st.integers(0, 3), min_size=2, max_size=10),
+    receiver=st.integers(0, 3),
+)
+def test_chain_state_emits_n_minus_local_minus_1_hops(arrivals, receiver):
+    """For k non-receiver arrivals the chain emits exactly k-1 hops (or 0)
+    plus one final hop -- every contribution is chained exactly once."""
+    chain = ChainState(receiver)
+    hops = 0
+    nonlocal_ = 0
+    for i, node in enumerate(arrivals):
+        h = chain.on_ready(node, f"o{i}")
+        if node != receiver:
+            nonlocal_ += 1
+        if h is not None:
+            hops += 1
+    assert hops == max(0, nonlocal_ - 1)
+    final = chain.final_hop("out")
+    assert (final is not None) == (nonlocal_ > 0)
+    assert len(chain.local_objects) == len(arrivals) - nonlocal_
