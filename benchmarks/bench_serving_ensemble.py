@@ -1,0 +1,93 @@
+"""Ensemble serving (paper section 5.3: "serving an ensemble of models
+3.3x faster").
+
+Two layers:
+
+  * simulator -- ``ensemble_serving`` scenario at n = 4/8/16 replicas,
+    Hoplite vs Ray-style data plane: weight-deployment broadcast time and
+    open-loop p50/p99 request latency;
+  * threaded cluster -- a real-bytes end-to-end run of the serve/ stack
+    (router + ensemble + deployment) with an open-loop Poisson stream,
+    reporting achieved throughput and tail latency.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from benchmarks.common import MB, emit
+from repro.core.simulation import ensemble_serving
+
+
+def sim_sweep() -> None:
+    for n in (4, 8, 16):
+        h = ensemble_serving(data_plane="hoplite", num_replicas=n,
+                             weight_bytes=64 * MB, num_requests=30)
+        r = ensemble_serving(data_plane="ray", num_replicas=n,
+                             weight_bytes=64 * MB, num_requests=30)
+        emit(
+            f"serve_deploy_hoplite_{n}r",
+            h["deploy_time"] * 1e6,
+            f"speedup_vs_ray={r['deploy_time'] / h['deploy_time']:.1f}x",
+        )
+        emit(f"serve_deploy_ray_{n}r", r["deploy_time"] * 1e6, "")
+        emit(
+            f"serve_p99_hoplite_{n}r",
+            h["latency"]["p99"] * 1e6,
+            f"p50={h['latency']['p50']*1e6:.0f}us completed={h['completed']}",
+        )
+        emit(
+            f"serve_p99_ray_{n}r",
+            r["latency"]["p99"] * 1e6,
+            f"p50={r['latency']['p50']*1e6:.0f}us completed={r['completed']}",
+        )
+
+
+def threaded_e2e() -> None:
+    from repro.runtime import Runtime
+    from repro.serve import (
+        EnsembleConfig,
+        EnsembleGroup,
+        OpenLoopRouter,
+        RouterConfig,
+        ServeMetrics,
+    )
+
+    rt = Runtime(num_nodes=8, executors_per_node=4)
+    metrics = ServeMetrics()
+    metrics.capture_bytes(rt.cluster.bytes_sent_per_node)
+    ens = EnsembleGroup(
+        rt,
+        model_fn=lambda w, x: x * float(np.asarray(w).ravel()[0]),
+        config=EnsembleConfig(num_replicas=8, quorum=5, request_timeout_s=30.0),
+        metrics=metrics,
+    )
+    ens.deploy(np.full(128 * 1024, 2.0))  # 1 MB weights through the tree
+    router = OpenLoopRouter(
+        ens, RouterConfig(rate_rps=40.0, max_outstanding=64), metrics
+    )
+    payloads = [np.full(256, float(i)) for i in range(40)]
+    router.run_open_loop(payloads, drain_timeout=120.0)
+    snap = metrics.snapshot()
+    lat = snap["latency"]
+    emit(
+        "serve_threaded_p50",
+        lat["p50"] * 1e6,
+        f"completed={snap['completed']}/{snap['offered']} rejected={snap['rejected']}",
+    )
+    emit("serve_threaded_p99", lat["p99"] * 1e6, "")
+    moved = metrics.bytes_moved(rt.cluster.bytes_sent_per_node)
+    emit("serve_threaded_bytes_moved", sum(moved) / MB, "MB_total_on_wire")
+
+
+def run() -> None:
+    sim_sweep()
+    threaded_e2e()
+
+
+if __name__ == "__main__":
+    run()

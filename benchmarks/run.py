@@ -23,6 +23,7 @@ def main() -> None:
         bench_p2p,
         bench_param_server,
         bench_rl,
+        bench_serving_ensemble,
         bench_tpu_collectives,
         roofline,
     )
@@ -34,6 +35,7 @@ def main() -> None:
         ("Appendix A: chain condition", bench_chain_condition.run),
         ("Figure 8: parameter server", bench_param_server.run),
         ("Figure 9: RL throughput", bench_rl.run),
+        ("Section 5.3: ensemble serving", bench_serving_ensemble.run),
         ("TPU collective schedules", bench_tpu_collectives.run),
         ("Roofline (from dry-run artifacts)", roofline.run),
     ]

@@ -1,0 +1,12 @@
+"""Hoplite reproduction package.
+
+Importing :mod:`repro` installs jax forward-compat aliases (see
+:mod:`repro._compat`) when jax is available; the pure-python core
+(``repro.core``, ``repro.runtime``, ``repro.serve``) stays importable
+without jax.
+"""
+
+try:
+    from repro import _compat  # noqa: F401
+except ImportError:  # pure-numpy environments: core/ runtime/ serve/ only
+    pass

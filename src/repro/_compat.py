@@ -1,0 +1,67 @@
+"""Compatibility shims for the pinned jax version.
+
+The repo targets the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``); the container pins jax 0.4.x where those still live
+under ``jax.experimental`` / do not exist.  Importing :mod:`repro`
+installs forward-compat aliases so src, tests, and examples can use one
+spelling everywhere.  Each alias is only installed when missing, so this
+module is a no-op on newer jax.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        # ``with jax.set_mesh(mesh):`` == entering the mesh context; on
+        # 0.4.x ``jax.sharding.Mesh`` is itself the context manager.
+        def set_mesh(mesh):
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "make_mesh"):
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+
+        def make_mesh(axis_shapes, axis_names, **kwargs):
+            kwargs.pop("axis_types", None)
+            devices = kwargs.pop("devices", None)
+            if devices is None:
+                devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+            return Mesh(devices, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+    else:
+        import inspect
+
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            _orig_make_mesh = jax.make_mesh
+
+            def make_mesh(axis_shapes, axis_names, **kwargs):
+                kwargs.pop("axis_types", None)
+                return _orig_make_mesh(axis_shapes, axis_names, **kwargs)
+
+            jax.make_mesh = make_mesh
+
+    import jax.sharding as _sharding
+
+    if not hasattr(_sharding, "AxisType"):
+        import enum
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        _sharding.AxisType = AxisType
+
+
+_install()

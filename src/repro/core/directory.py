@@ -30,6 +30,9 @@ from repro.core.api import (
     SMALL_OBJECT_THRESHOLD,
 )
 
+# Per-shard tombstone bound (see _Shard.deleted).
+_TOMBSTONES_PER_SHARD = 4096
+
 
 class _Shard:
     """One directory shard: ObjectID -> entry."""
@@ -41,6 +44,13 @@ class _Shard:
         self.subscribers: Dict[str, List[Callable]] = collections.defaultdict(list)
         # Locations temporarily checked out by an in-flight transfer.
         self.checked_out: Dict[str, Dict[int, Location]] = collections.defaultdict(dict)
+        # Tombstones: deleted object ids.  A transfer that was in flight
+        # when Delete arrived must not silently re-add the object when it
+        # checks its location back in / publishes completion.  Bounded
+        # FIFO: ids are unique-per-object, so a tombstone only matters for
+        # the lifetime of transfers that started before the Delete; capping
+        # keeps week-long serving runs from accreting one entry per request.
+        self.deleted: "collections.OrderedDict[str, None]" = collections.OrderedDict()
 
 
 class ObjectDirectory:
@@ -66,6 +76,8 @@ class ObjectDirectory:
         """A node is *about to* hold this object (Put started / transfer
         started).  Partial copies can act as senders (section 4.2)."""
         shard = self._shard(object_id)
+        if object_id in shard.deleted:
+            return
         if size is not None:
             shard.size[object_id] = size
         loc = shard.locations[object_id].get(node)
@@ -75,6 +87,8 @@ class ObjectDirectory:
 
     def publish_complete(self, object_id: str, node: int, size: int) -> None:
         shard = self._shard(object_id)
+        if object_id in shard.deleted:
+            return
         shard.size[object_id] = size
         shard.locations[object_id][node] = Location(node, Progress.COMPLETE, size)
         self._notify(shard, object_id)
@@ -134,9 +148,13 @@ class ObjectDirectory:
         return chosen
 
     def return_location(self, object_id: str, node: int) -> None:
-        """Add a checked-out sender back (transfer finished)."""
+        """Add a checked-out sender back (transfer finished).  A location
+        whose object was deleted while checked out is dropped, not
+        re-added."""
         shard = self._shard(object_id)
         loc = shard.checked_out[object_id].pop(node, None)
+        if object_id in shard.deleted:
+            return
         if loc is not None and node not in shard.locations[object_id]:
             shard.locations[object_id][node] = loc
             self._notify(shard, object_id)
@@ -171,7 +189,24 @@ class ObjectDirectory:
         shard.inline.pop(object_id, None)
         shard.size.pop(object_id, None)
         shard.subscribers.pop(object_id, None)
+        shard.deleted[object_id] = None
+        while len(shard.deleted) > _TOMBSTONES_PER_SHARD:
+            shard.deleted.popitem(last=False)
         return nodes
+
+    def drop_location(self, object_id: str, node: int) -> None:
+        """Invalidate a stale location (e.g. the copy was evicted under
+        capacity pressure): remove it whether live or checked out."""
+        shard = self._shard(object_id)
+        shard.locations[object_id].pop(node, None)
+        shard.checked_out[object_id].pop(node, None)
+
+    def is_deleted(self, object_id: str) -> bool:
+        return object_id in self._shard(object_id).deleted
+
+    def revive(self, object_id: str) -> None:
+        """Clear a tombstone: the application explicitly re-Puts this id."""
+        self._shard(object_id).deleted.pop(object_id, None)
 
     def fail_node(self, node: int) -> List[str]:
         """Drop every location on a failed node; returns object IDs that
@@ -228,6 +263,14 @@ class ReplicatedDirectory(ObjectDirectory):
         nodes = super().delete(object_id)
         self._mirror("delete", object_id)
         return nodes
+
+    def revive(self, object_id):
+        super().revive(object_id)
+        self._mirror("revive", object_id)
+
+    def drop_location(self, object_id, node):
+        super().drop_location(object_id, node)
+        self._mirror("drop_location", object_id, node)
 
     def fail_node(self, node):
         orphaned = super().fail_node(node)

@@ -98,6 +98,7 @@ class LocalCluster:
         self._check_alive(node)
         value = np.asarray(value)
         with self.lock:
+            self.directory.revive(object_id)  # explicit re-Put clears tombstone
             self.meta[object_id] = (value.dtype, value.shape)
             buf = self.stores[node].put_array(object_id, value, self.chunk_size)
             if buf.size < SMALL_OBJECT_THRESHOLD:
@@ -122,7 +123,10 @@ class LocalCluster:
                 return local.to_array(dtype, shape).copy()
         buf = self._fetch(node, object_id, deadline)
         with self.lock:
-            dtype, shape = self.meta[object_id]
+            meta = self.meta.get(object_id)
+            if meta is None:  # deleted immediately after the transfer
+                raise ObjectLost(object_id)
+            dtype, shape = meta
             return buf.to_array(dtype, shape).copy()
 
     def _fetch(self, node: int, object_id: str, deadline: float) -> ChunkedBuffer:
@@ -143,6 +147,12 @@ class LocalCluster:
                     continue
                 size = self.directory.size_of(object_id)
                 src_buf = self.stores[loc.node].get(object_id)
+                if src_buf is None:
+                    # Stale location: the copy was LRU-evicted under
+                    # capacity pressure after publication.  Invalidate it
+                    # and retry another source.
+                    self.directory.drop_location(object_id, loc.node)
+                    continue
                 dst_buf = self.stores[node].get(object_id)
                 if dst_buf is None:
                     dst_buf = self.stores[node].create(
@@ -156,6 +166,13 @@ class LocalCluster:
                     self.directory.fail_node(loc.node)
                 continue
             with self.cv:
+                if self.directory.is_deleted(object_id) or object_id not in self.meta:
+                    # Deleted mid-transfer: drop our copy instead of
+                    # silently re-adding the object at check-in.
+                    self.stores[node].delete(object_id)
+                    self.directory.return_location(object_id, loc.node)  # drops tombstoned loc
+                    self.cv.notify_all()
+                    raise ObjectLost(object_id)
                 self.directory.publish_complete(object_id, node, size)
                 self.directory.return_location(object_id, loc.node)
                 self.cv.notify_all()
@@ -223,12 +240,15 @@ class LocalCluster:
             futs = []
             for gi, group in enumerate(groups):
                 sub_id = f"{target_id}/g{gi}"
-                coord = self._first_location(group, deadline)
+                coord = self._first_location(group, deadline, fallback=node)
                 sub_ids.append(sub_id)
                 futs.append(self._reduce_async(coord, sub_id, group, op, deadline))
             for f in futs:
                 f.result(timeout=max(0.0, deadline - time.time()))
-            return self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
+            out = self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
+            for sid in sub_ids:  # group partials are internal: reclaim them
+                self.delete(sid)
+            return out
         return self._reduce_chain_blocking(node, target_id, list(source_ids), op, deadline)
 
     def _reduce_async(self, node, target_id, source_ids, op, deadline) -> Future:
@@ -254,15 +274,24 @@ class LocalCluster:
                 if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
                     raise TimeoutError("reduce: no source metadata")
 
-    def _first_location(self, source_ids, deadline) -> int:
-        """Node of the first-ready source in a group (sub-coordinator)."""
+    def _first_location(self, source_ids, deadline, fallback: Optional[int] = None) -> int:
+        """Node of the first-ready source in a group (sub-coordinator).
+
+        A source may exist only as a directory inline entry (its producing
+        node died after a small-object Put); it has no location, so the
+        group is coordinated at ``fallback`` instead of spinning until the
+        deadline."""
         with self.cv:
             while True:
+                inline_ready = False
                 for oid in source_ids:
                     locs = self.directory.locations(oid)
                     for l in locs:
                         if l.progress is Progress.COMPLETE and l.node not in self.dead:
                             return l.node
+                    inline_ready = inline_ready or self.directory.get_inline(oid) is not None
+                if inline_ready and fallback is not None:
+                    return fallback
                 if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
                     raise TimeoutError("reduce: no group coordinator")
 
@@ -273,6 +302,7 @@ class LocalCluster:
         chain = ChainState(node, tag=target_id)
         pending = set(source_ids)
         hop_futures: List[Future] = []
+        intermediates: List[str] = []  # chain-generated partials to reclaim
         first = self._wait_any_meta(source_ids, deadline)
         dtype, shape = self.meta[first]
         while pending:
@@ -296,6 +326,7 @@ class LocalCluster:
             pending.discard(oid)
             hop = chain.on_ready(src, oid)
             if hop is not None:
+                intermediates.append(hop.out_object)
                 hop_futures.append(self._exec_hop_async(hop, dtype, shape, op, deadline))
         for f in hop_futures:
             f.result(timeout=max(0.0, deadline - time.time()))
@@ -310,6 +341,22 @@ class LocalCluster:
             acc = val.astype(dtype, copy=True) if acc is None else op(acc, val)
         assert acc is not None, "empty reduce"
         self.put(node, target_id, acc.reshape(shape))
+        # Reclaim chain partials (hop outputs are pinned at their nodes and
+        # would otherwise accumulate one set per reduce).  The receiver-side
+        # staging copy made by _fetch_from is never published, so Delete
+        # cannot find it through the directory: drop it here -- but only
+        # when the receiver holds no *published* copy of that id (it might,
+        # if the same object was Get here earlier).
+        for iid in intermediates:
+            self.delete(iid)
+        if final is not None:
+            with self.cv:
+                published_here = any(
+                    l.node == node
+                    for l in self.directory.locations(final.src_object)
+                )
+                if not published_here:
+                    self.stores[node].delete(final.src_object)
         return target_id
 
     def _exec_hop_async(self, hop, dtype, shape, op, deadline) -> Future:
@@ -325,10 +372,12 @@ class LocalCluster:
                     local_buf = self.stores[hop.dst_node].get(hop.dst_object)
                     if local_buf is None:
                         raise ObjectLost(hop.dst_object)
+                    src_buf = self.stores[hop.src_node].get(hop.src_object)
+                    if src_buf is None:  # source node wiped by a failure
+                        raise ObjectLost(hop.src_object)
                     out = self.stores[hop.dst_node].create(
                         hop.out_object, size, pinned=True, chunk_size=self.chunk_size
                     )
-                    src_buf = self.stores[hop.src_node].get(hop.src_object)
                     self.directory.publish_partial(hop.out_object, hop.dst_node, size)
                 self._stream_reduce(hop.src_node, hop.dst_node, src_buf, local_buf, out, dtype, op)
                 with self.cv:
@@ -368,6 +417,11 @@ class LocalCluster:
         """Stream a specific remote object into ``node`` (final chain hop)."""
         with self.cv:
             while True:
+                if src_node in self.dead:
+                    # The chain tail died with its node: fail fast so the
+                    # caller's recovery path runs instead of riding the
+                    # deadline (the request-tail stall).
+                    raise DeadNode(str(src_node))
                 src_buf = self.stores[src_node].get(object_id)
                 if src_buf is not None:
                     break

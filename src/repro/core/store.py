@@ -104,12 +104,29 @@ class NodeStore:
 
     def _maybe_evict(self, incoming: int) -> None:
         """Local LRU over unpinned copies (paper section 7: 'Hoplite is free
-        to evict any additional copies ... local LRU policy per node')."""
+        to evict any additional copies ... local LRU policy per node').
+
+        Pinned copies are never candidates (they are not in ``_lru``), and
+        neither are *incomplete* unpinned copies: those are the destinations
+        of in-flight transfers, and evicting one would detach the buffer the
+        sender is still streaming into, leaving the directory advertising a
+        copy the store no longer holds."""
         if self.capacity_bytes is None:
             return
+        skipped = []
         while self.used_bytes + incoming > self.capacity_bytes and self._lru:
-            victim, _ = self._lru.popitem(last=False)
+            victim, vsize = self._lru.popitem(last=False)
+            buf = self.objects.get(victim)
+            if buf is None:
+                continue  # stale LRU entry; nothing held
+            if not buf.complete:
+                skipped.append((victim, vsize))
+                continue
             self.objects.pop(victim, None)
+        # Re-install skipped in-flight entries at the cold end, original order.
+        for victim, vsize in reversed(skipped):
+            self._lru[victim] = vsize
+            self._lru.move_to_end(victim, last=False)
 
     # -- creation -----------------------------------------------------------
 
@@ -118,6 +135,10 @@ class NodeStore:
             existing = self.objects[object_id]
             if existing.size != size:
                 raise ObjectAlreadyExists(object_id)
+            if pinned and object_id not in self.pinned:
+                # Pin upgrade: an evictable copy becomes the pinned one.
+                self.pinned.add(object_id)
+                self._lru.pop(object_id, None)
             return existing
         self._maybe_evict(size)
         buf = ChunkedBuffer(size, chunk_size)
@@ -130,11 +151,16 @@ class NodeStore:
 
     def put_array(self, object_id: str, arr: np.ndarray, chunk_size: int = DEFAULT_CHUNK_SIZE) -> ChunkedBuffer:
         buf = ChunkedBuffer.from_array(arr, chunk_size)
-        if object_id in self.objects:
-            existing = self.objects[object_id]
+        existing = self.objects.get(object_id)
+        if existing is not None:
             if existing.complete and not np.array_equal(existing.data, buf.data):
                 raise ObjectAlreadyExists(object_id)
-        self._maybe_evict(buf.size)
+            # Replacing our own copy: only the size delta is incoming;
+            # counting the full size would double-count the object and
+            # evict innocent bystanders.
+            self._maybe_evict(buf.size - existing.size)
+        else:
+            self._maybe_evict(buf.size)
         self.objects[object_id] = buf
         self.pinned.add(object_id)
         self._lru.pop(object_id, None)

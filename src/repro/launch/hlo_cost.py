@@ -35,7 +35,29 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(opcall: str) -> List[str]:
+    """Operand names from ``kind(...)``.
+
+    Handles both HLO print dialects: bare operands (``dot(%a, %b)``) and
+    typed operands (``dot(f32[4,128]{1,0} %a, f32[128,128]{1,0} %b)``).
+    Only the first balanced paren group is scanned so attributes after the
+    call (``, calls=%comp``) are not picked up as operands.
+    """
+    start = opcall.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    for i in range(start, len(opcall)):
+        if opcall[i] == "(":
+            depth += 1
+        elif opcall[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_NAME_RE.findall(opcall[start : i + 1])
+    return _OPERAND_NAME_RE.findall(opcall[start:])
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -129,13 +151,7 @@ def _parse_computations(hlo: str) -> Dict[str, List[_Op]]:
                 continue
             type_str, opcall = parts
         kind = opcall.split("(")[0].strip()
-        ops_m = _OPERANDS_RE.search(opcall)
-        operands = (
-            [o.strip().lstrip("%") for o in ops_m.group(1).replace("%", "").split(",")]
-            if ops_m
-            else []
-        )
-        comps[cur].append(_Op(name, kind, type_str, line, operands))
+        comps[cur].append(_Op(name, kind, type_str, line, _operand_names(opcall)))
     return comps
 
 

@@ -41,9 +41,27 @@ class ObjectRef:
         self._runtime = runtime
         self.ready = threading.Event()
         self.error: Optional[BaseException] = None
+        # Placement: the node the producing task ran on (updated if the
+        # task is re-executed elsewhere after a failure).
+        self.node: Optional[int] = None
+        self._callbacks: List[Callable] = []
+
+    def add_done_callback(self, cb: Callable[["ObjectRef"], None]) -> None:
+        """Run ``cb(ref)`` when the producing task finishes (success or
+        error).  Fires immediately if already done.  Each registration
+        fires exactly once: a callback registered before a lineage
+        re-execution is consumed by the first completion, not replayed."""
+        fire = False
+        with self._runtime._lock:
+            if self.ready.is_set():
+                fire = True
+            else:
+                self._callbacks.append(cb)
+        if fire:
+            cb(self)
 
     def __repr__(self):
-        return f"ObjectRef({self.id}, ready={self.ready.is_set()})"
+        return f"ObjectRef({self.id}, ready={self.ready.is_set()}, node={self.node})"
 
 
 class Runtime:
@@ -66,6 +84,37 @@ class Runtime:
         self._sema = [threading.Semaphore(executors_per_node) for _ in range(self.num_nodes)]
         self.tasks_executed = 0
         self.tasks_reexecuted = 0
+        # Failure hooks: cb(node, orphaned_object_ids) on every node kill.
+        self._failure_listeners: List[Callable[[int, List[str]], None]] = []
+
+    # -- failure hooks ------------------------------------------------------
+
+    def add_failure_listener(self, cb: Callable[[int, List[str]], None]) -> None:
+        with self._lock:
+            self._failure_listeners.append(cb)
+
+    def remove_failure_listener(self, cb: Callable) -> None:
+        with self._lock:
+            if cb in self._failure_listeners:
+                self._failure_listeners.remove(cb)
+
+    def fail_node(self, node: int) -> List[str]:
+        """Kill a node and notify failure listeners (serving control plane,
+        tests).  Returns object ids that lost their last copy."""
+        orphaned = self.cluster.fail_node(node)
+        with self._lock:
+            listeners = list(self._failure_listeners)
+        for cb in listeners:
+            cb(node, orphaned)
+        return orphaned
+
+    def restart_node(self, node: int) -> None:
+        self.cluster.restart_node(node)
+
+    def placement_of(self, ref: ObjectRef) -> Optional[int]:
+        """The node the ref's producing task ran on (or None for an
+        unplaced/errored ref)."""
+        return ref.node
 
     # -- scheduling ---------------------------------------------------------
 
@@ -83,6 +132,7 @@ class Runtime:
         """Submit ``fn(*args)``; ObjectRef args are fetched via Hoplite."""
         ref = ObjectRef(self)
         node = self._pick_node(node)
+        ref.node = node
         with self._lock:
             self._lineage[ref.id] = (fn, args, kwargs, node)
             self._refs[ref.id] = ref
@@ -95,10 +145,12 @@ class Runtime:
     def put(self, value: np.ndarray, node: Optional[int] = None) -> ObjectRef:
         ref = ObjectRef(self)
         node = self._pick_node(node)
+        ref.node = node
         self.cluster.put(node, ref.id, np.asarray(value))
         with self._lock:
             self._refs[ref.id] = ref
         ref.ready.set()
+        self._fire_callbacks(ref)
         return ref
 
     def _resolve(self, arg, node: int):
@@ -118,6 +170,16 @@ class Runtime:
             finally:
                 self.tasks_executed += 1
                 ref.ready.set()
+                self._fire_callbacks(ref)
+
+    def _fire_callbacks(self, ref: ObjectRef) -> None:
+        with self._lock:
+            cbs, ref._callbacks = ref._callbacks, []
+        for cb in cbs:
+            try:
+                cb(ref)
+            except Exception:  # noqa: BLE001 -- observer errors never kill tasks
+                pass
 
     # -- data access ------------------------------------------------------------
 
@@ -148,6 +210,7 @@ class Runtime:
         exec_node = orig_node if orig_node not in self.cluster.dead else self._pick_node(None)
         self.tasks_reexecuted += 1
         ref.ready.clear()
+        ref.node = exec_node
         self._execute(ref, fn, args, kwargs, exec_node)
         return ref.error is None
 
@@ -181,6 +244,7 @@ class Runtime:
         """Annotated reduce: Hoplite chains the sources dynamically."""
         node = self._pick_node(node)
         out = ObjectRef(self)
+        out.node = node
         with self._lock:
             self._refs[out.id] = out
 
@@ -195,6 +259,7 @@ class Runtime:
                 out.error = e
             finally:
                 out.ready.set()
+                self._fire_callbacks(out)
 
         threading.Thread(target=run, daemon=True).start()
         return out
@@ -204,3 +269,4 @@ class Runtime:
             self.cluster.delete(r.id)
             with self._lock:
                 self._lineage.pop(r.id, None)
+                self._refs.pop(r.id, None)

@@ -1,0 +1,31 @@
+"""Hoplite-Serve: fault-tolerant ensemble serving over the task runtime.
+
+Layered on :class:`repro.runtime.Runtime` / ``LocalCluster``:
+
+  * :mod:`repro.serve.router`   -- open-loop front-end (Poisson arrivals,
+    admission control, per-replica queues);
+  * :mod:`repro.serve.ensemble` -- broadcast fan-out, ``wait(k of n)`` +
+    annotated reduce aggregation, straggler/failure cut-off;
+  * :mod:`repro.serve.deploy`   -- versioned weight deployment through the
+    receiver-driven broadcast tree, hot-swap mid-traffic;
+  * :mod:`repro.serve.metrics`  -- telemetry shared with the simulator.
+"""
+
+from repro.serve.deploy import WeightDeployment
+from repro.serve.ensemble import EnsembleConfig, EnsembleGroup, QuorumLost, ReplicaHandle
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.router import OpenLoopRouter, Rejected, ReplicaQueue, RouterConfig
+
+__all__ = [
+    "EnsembleConfig",
+    "EnsembleGroup",
+    "LatencyHistogram",
+    "OpenLoopRouter",
+    "QuorumLost",
+    "Rejected",
+    "ReplicaHandle",
+    "ReplicaQueue",
+    "RouterConfig",
+    "ServeMetrics",
+    "WeightDeployment",
+]

@@ -2,6 +2,8 @@
 chain state machine, simulator protocols, threaded cluster, fault
 tolerance (system spec deliverable c)."""
 
+import time
+
 import numpy as np
 import pytest
 
@@ -222,3 +224,35 @@ def test_local_delete_pins_semantics():
     c.put(0, "a", big)
     c.delete("a")
     assert not c.stores[0].contains("a")
+
+
+def test_local_reduce_inline_only_sources_after_node_loss():
+    """2-D reduce where every source survives only as a directory inline
+    entry (all producing nodes died after small-object Puts): the group
+    coordinator falls back to the receiver instead of spinning until the
+    deadline (regression: 30s serving-tail stall)."""
+    c = LocalCluster(8)
+    small = [np.full(128, float(i)) for i in range(5)]  # 1 KB each -> 2-D chain
+    for i, v in enumerate(small):
+        c.put(i + 1, f"s{i}", v)
+    for i in range(5):
+        c.fail_node(i + 1)  # locations drop; inline entries survive
+    t0 = time.time()
+    c.reduce(0, "tot", [f"s{i}" for i in range(5)], timeout=10.0)
+    assert time.time() - t0 < 5.0, "reduce stalled hunting a coordinator"
+    np.testing.assert_allclose(c.get(0, "tot"), sum(small))
+
+
+def test_final_hop_fetch_from_dead_node_fails_fast():
+    """The final chain hop must fail fast when the tail's node died, not
+    ride the deadline (regression: serving requests stalling for the full
+    request timeout after a replica kill)."""
+    from repro.core.local import DeadNode
+
+    c = LocalCluster(2)
+    c.put(1, "x", np.zeros(100_000))
+    c.fail_node(1)
+    t0 = time.time()
+    with pytest.raises(DeadNode):
+        c._fetch_from(0, "x", 1, deadline=time.time() + 30.0)
+    assert time.time() - t0 < 5.0

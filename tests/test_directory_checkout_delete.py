@@ -1,0 +1,77 @@
+"""Directory checkout vs concurrent Delete (paper sections 4.3 + 7).
+
+A location checked out by an in-flight transfer whose object is deleted
+mid-transfer must NOT be silently re-added by the check-in path
+(return_location / publish_complete), and the receiver's new copy must
+not linger in its store."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import ObjectLost
+from repro.core.directory import ObjectDirectory, ReplicatedDirectory
+from repro.core.local import LocalCluster
+
+
+def test_return_location_after_delete_does_not_readd():
+    d = ObjectDirectory()
+    d.publish_complete("x", node=0, size=10)
+    loc = d.checkout_location("x", remove=True)
+    assert loc.node == 0
+    d.delete("x")
+    d.return_location("x", 0)  # check-in after delete: must be a no-op
+    assert d.locations("x") == []
+    assert d.checkout_location("x") is None
+    with pytest.raises(ObjectLost):
+        d.assert_available("x")
+
+
+def test_publish_after_delete_is_tombstoned():
+    d = ObjectDirectory()
+    d.publish_complete("x", node=0, size=10)
+    d.delete("x")
+    d.publish_partial("x", node=1, size=10)
+    d.publish_complete("x", node=1, size=10)
+    assert d.locations("x") == []
+    assert d.size_of("x") is None
+    # Explicit re-Put of the same id is allowed via revive.
+    d.revive("x")
+    d.publish_complete("x", node=2, size=10)
+    assert [l.node for l in d.locations("x")] == [2]
+
+
+def test_replicated_directory_mirrors_tombstones():
+    d = ReplicatedDirectory(num_replicas=1)
+    d.publish_complete("x", node=0, size=10)
+    d.delete("x")
+    d.publish_complete("x", node=1, size=10)
+    d.fail_primary()  # promote the replica: tombstone must have mirrored
+    assert d.locations("x") == []
+
+
+def test_cluster_delete_mid_transfer_drops_copy():
+    """Kill the object while a paced Get is streaming it: the receiver
+    must not re-publish the object, keep it in its store, or return it."""
+    c = LocalCluster(2, pace=0.002, chunk_size=4096)
+    payload = np.arange(256 * 1024 // 8, dtype=np.float64)  # 256 KB, 64 chunks
+    c.put(0, "w", payload)
+
+    fut = c.get_async(1, "w", timeout=10.0)
+    time.sleep(0.02)  # let the transfer get going
+    c.delete("w")
+    with pytest.raises((ObjectLost, TimeoutError)):
+        fut.result(timeout=10.0)
+    assert not c.stores[1].contains("w")
+    assert c.directory.locations("w") == []
+    assert c.directory.checkout_location("w") is None
+
+
+def test_cluster_delete_then_reput_same_id():
+    c = LocalCluster(2)
+    c.put(0, "v", np.ones(4))
+    c.delete("v")
+    c.put(0, "v", np.full(4, 2.0))  # revive: explicit re-Put of the id
+    np.testing.assert_array_equal(c.get(1, "v"), np.full(4, 2.0))
