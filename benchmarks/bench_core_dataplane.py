@@ -1,0 +1,270 @@
+"""Threaded data-plane benchmarks: real bytes through ``LocalCluster``.
+
+Where ``bench_p2p``/``bench_collectives`` run the discrete-event *simulator*
+(modeled EC2 time), this suite measures the actual wall-clock of the
+threaded data plane -- the component every workload (param-server, RL,
+ensemble serving) blocks on.  It is the source of the tracked
+``BENCH_core.json`` perf trajectory:
+
+  * ``p2p``        -- single Put -> remote Get throughput
+  * ``broadcast``  -- 1 -> n-1 concurrent Gets of one object
+  * ``reduce``     -- n-source chained reduce into one receiver
+  * ``allreduce``  -- reduce + broadcast of the result
+  * ``concurrent`` -- the acceptance scenario: 4+ simultaneous broadcasts
+    AND reduces over disjoint node pairs on an 8-node cluster.  Under a
+    cluster-global lock these contend on every chunk; under per-buffer
+    watermarks they must not.
+
+Besides wall-clock, every scenario reports *contention counters*:
+
+  * ``wakeups``          -- times a blocked data-plane thread woke up
+  * ``notified_waiters`` -- waiters woken per notify, summed (the cost of
+    ``notify_all`` on a shared condition: O(threads x chunks) when global)
+
+The counters come from ``cluster.stats`` when the data plane exposes it
+(per-buffer watermark implementation); on the legacy single-condition
+data plane they are collected by instrumenting ``cluster.cv`` so the same
+benchmark produces comparable before/after numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from benchmarks.common import MB, emit
+
+NUM_NODES = 8
+
+
+# ---------------------------------------------------------------------------
+# counter shim: native stats (new data plane) or instrumented cv (legacy)
+# ---------------------------------------------------------------------------
+
+
+def attach_counters(cluster):
+    """Return a ``snapshot() -> dict`` for data-plane contention counters.
+
+    New data plane: ``cluster.stats`` (per-buffer wakeup accounting).
+    Legacy data plane: wrap the cluster-global condition variable.
+    """
+    if hasattr(cluster, "stats"):
+        return lambda: dict(cluster.stats)
+
+    counters = {"wakeups": 0, "notifies": 0, "notified_waiters": 0}
+    waiting = [0]
+    orig_wait = cluster.cv.wait
+    orig_notify_all = cluster.cv.notify_all
+
+    def wait(timeout=None):
+        waiting[0] += 1
+        try:
+            return orig_wait(timeout)
+        finally:
+            waiting[0] -= 1
+            counters["wakeups"] += 1
+
+    def notify_all():
+        counters["notifies"] += 1
+        counters["notified_waiters"] += waiting[0]
+        return orig_notify_all()
+
+    cluster.cv.wait = wait
+    cluster.cv.notify_all = notify_all
+    return lambda: dict(counters)
+
+
+def _make_cluster(chunk_size):
+    from repro.core.local import LocalCluster
+
+    c = LocalCluster(NUM_NODES, chunk_size=chunk_size)
+    return c, attach_counters(c)
+
+
+def _payload(seed, nbytes):
+    return (
+        np.random.RandomState(seed)
+        .randint(0, 255, size=nbytes, dtype=np.uint8)
+        .view(np.uint8)
+    )
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+
+def bench_p2p(nbytes, chunk_size):
+    c, snap = _make_cluster(chunk_size)
+    x = _payload(0, nbytes)
+    c.put(0, "x", x)
+    t0 = time.perf_counter()
+    got = c.get(1, "x", timeout=120.0)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(got, x)
+    return dt, nbytes, snap()
+
+
+def bench_broadcast(nbytes, chunk_size):
+    c, snap = _make_cluster(chunk_size)
+    x = _payload(1, nbytes)
+    c.put(0, "x", x)
+    t0 = time.perf_counter()
+    futs = [c.get_async(i, "x", timeout=120.0) for i in range(1, NUM_NODES)]
+    for f in futs:
+        assert np.array_equal(f.result(timeout=120.0), x)
+    dt = time.perf_counter() - t0
+    return dt, nbytes * (NUM_NODES - 1), snap()
+
+
+def bench_reduce(nbytes, chunk_size):
+    c, snap = _make_cluster(chunk_size)
+    n_elems = nbytes // 8
+    vals = [np.random.RandomState(i).rand(n_elems) for i in range(NUM_NODES)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    t0 = time.perf_counter()
+    c.reduce(0, "sum", [f"g{i}" for i in range(NUM_NODES)], timeout=120.0)
+    out = c.get(0, "sum", timeout=120.0)
+    dt = time.perf_counter() - t0
+    np.testing.assert_allclose(out, sum(vals), rtol=1e-10)
+    return dt, nbytes * (NUM_NODES - 1), snap()
+
+
+def bench_allreduce(nbytes, chunk_size):
+    c, snap = _make_cluster(chunk_size)
+    n_elems = nbytes // 8
+    vals = [np.random.RandomState(i).rand(n_elems) for i in range(NUM_NODES)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    t0 = time.perf_counter()
+    c.reduce(0, "sum", [f"g{i}" for i in range(NUM_NODES)], timeout=120.0)
+    futs = [c.get_async(i, "sum", timeout=120.0) for i in range(1, NUM_NODES)]
+    for f in futs:
+        np.testing.assert_allclose(f.result(timeout=120.0), sum(vals), rtol=1e-10)
+    dt = time.perf_counter() - t0
+    return dt, nbytes * 2 * (NUM_NODES - 1), snap()
+
+
+def bench_concurrent(nbytes, chunk_size, n_streams=4):
+    """The acceptance scenario: ``n_streams`` broadcasts AND ``n_streams``
+    reduces in flight simultaneously on one 8-node cluster.  Disjoint
+    transfers must not contend."""
+    c, snap = _make_cluster(chunk_size)
+    n_elems = nbytes // 8
+
+    bcast_payloads = {}
+    for s in range(n_streams):
+        x = _payload(100 + s, nbytes)
+        c.put(s % NUM_NODES, f"b{s}", x)
+        bcast_payloads[s] = x
+    reduce_vals = {}
+    for s in range(n_streams):
+        vals = [np.random.RandomState(200 + s * 16 + i).rand(n_elems) for i in range(NUM_NODES)]
+        for i, v in enumerate(vals):
+            c.put(i, f"r{s}-g{i}", v)
+        reduce_vals[s] = vals
+
+    errors = []
+
+    def one_broadcast(s):
+        try:
+            futs = [
+                c.get_async(i, f"b{s}", timeout=300.0)
+                for i in range(NUM_NODES)
+                if i != s % NUM_NODES
+            ]
+            for f in futs:
+                assert np.array_equal(f.result(timeout=300.0), bcast_payloads[s])
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def one_reduce(s):
+        try:
+            recv = (s + 3) % NUM_NODES
+            c.reduce(recv, f"r{s}-sum", [f"r{s}-g{i}" for i in range(NUM_NODES)], timeout=300.0)
+            out = c.get(recv, f"r{s}-sum", timeout=300.0)
+            np.testing.assert_allclose(out, sum(reduce_vals[s]), rtol=1e-10)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=one_broadcast, args=(s,), daemon=True)
+        for s in range(n_streams)
+    ] + [
+        threading.Thread(target=one_reduce, args=(s,), daemon=True)
+        for s in range(n_streams)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600.0)
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    moved = n_streams * nbytes * (NUM_NODES - 1) * 2
+    return dt, moved, snap()
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+SCENARIOS = [
+    ("p2p", bench_p2p),
+    ("broadcast", bench_broadcast),
+    ("reduce", bench_reduce),
+    ("allreduce", bench_allreduce),
+    ("concurrent", bench_concurrent),
+]
+
+
+def run_suite(quick: bool = False):
+    """Run all scenarios; returns a JSON-able dict of results."""
+    nbytes = 1 * MB if quick else 4 * MB
+    chunk_size = 16 * 1024 if quick else 4 * 1024
+    results = {}
+    for name, fn in SCENARIOS:
+        dt, moved, counters = fn(nbytes, chunk_size)
+        results[name] = {
+            "seconds": round(dt, 6),
+            "payload_bytes": nbytes,
+            "bytes_moved": moved,
+            "mb_per_s": round(moved / dt / MB, 2),
+            "counters": counters,
+        }
+    return {
+        "suite": "core_dataplane",
+        "num_nodes": NUM_NODES,
+        "chunk_size": chunk_size,
+        "quick": quick,
+        "results": results,
+    }
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    out = run_suite(quick=quick)
+    for name, r in out["results"].items():
+        cnt = r["counters"]
+        emit(
+            f"core_{name}_{r['payload_bytes'] // MB}MB",
+            r["seconds"] * 1e6,
+            f"mbps={r['mb_per_s']} wakeups={cnt.get('wakeups', 0)} "
+            f"notified_waiters={cnt.get('notified_waiters', 0)}",
+        )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

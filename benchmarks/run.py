@@ -4,10 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows.  Figures 5-9 run on the
 discrete-event simulator (the real Hoplite control plane over a modeled
 EC2 data plane); the chain-condition bench validates Appendix A; the TPU
 collective bench and the roofline report read compiled-HLO schedules.
+
+``--json PATH`` switches to the threaded *data-plane* suite
+(``bench_core_dataplane``: real bytes through ``LocalCluster``) and
+writes machine-readable results -- the tracked ``BENCH_core.json``
+trajectory.  ``--quick`` shrinks payloads for CI smoke runs.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -16,10 +22,31 @@ sys.path.insert(0, ".")
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="run the core data-plane suite and write JSON results to PATH",
+    )
+    parser.add_argument(
+        "--quick",
+        action="store_true",
+        help="smaller payloads (CI smoke mode); only affects --json suite",
+    )
+    args = parser.parse_args()
+
+    if args.json:
+        from benchmarks import bench_core_dataplane
+
+        bench_core_dataplane.run(quick=args.quick, json_path=args.json)
+        return
+
     from benchmarks import (
         bench_async,
         bench_chain_condition,
         bench_collectives,
+        bench_core_dataplane,
         bench_p2p,
         bench_param_server,
         bench_rl,
@@ -36,6 +63,7 @@ def main() -> None:
         ("Figure 8: parameter server", bench_param_server.run),
         ("Figure 9: RL throughput", bench_rl.run),
         ("Section 5.3: ensemble serving", bench_serving_ensemble.run),
+        ("Threaded data plane (real bytes)", bench_core_dataplane.run),
         ("TPU collective schedules", bench_tpu_collectives.run),
         ("Roofline (from dry-run artifacts)", roofline.run),
     ]

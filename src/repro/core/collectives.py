@@ -47,7 +47,53 @@ from repro.core.planner import LinkSpec, ICI_LINK, DCN_LINK
 # plain psum beats any software-pipelined schedule (latency-bound regime).
 SMALL_TENSOR_BYTES = 256 * 1024
 
-DEFAULT_NUM_CHUNKS = 16
+# Autotuned chunk-count clamp: at least one chunk, at most this many
+# ppermute steps per leg, and never chunks smaller than MIN_CHUNK_BYTES
+# (tiny ppermute payloads are pure launch overhead).
+MAX_NUM_CHUNKS = 256
+MIN_CHUNK_BYTES = 1024
+
+
+def autotune_num_chunks(
+    axis_size: int,
+    nbytes: int,
+    link: LinkSpec = ICI_LINK,
+    step_overhead: float = 2e-6,
+) -> int:
+    """Appendix-A optimal chunk count for a fused chain schedule.
+
+    The fused chain allreduce runs ``C + 2n - 3`` ppermute steps of
+    ``S/C`` bytes, so with per-step latency ``L`` (link latency plus
+    software launch/sync overhead):
+
+        T(C) = (C + 2n - 3) * (L + S/(C*B))
+             = C*L + S/B + (2n-3)*L + (2n-3)*S/(C*B)
+
+    dT/dC = L - (2n-3)*S/(B*C^2) = 0  gives
+
+        C* = sqrt((2n-3) * S / (B * L))
+
+    -- more chunks for bigger objects (monotone nondecreasing in S,
+    unit-tested) and longer chains, fewer when per-step latency dominates.
+    Clamped to [1, MAX_NUM_CHUNKS] and to chunks of >= MIN_CHUNK_BYTES.
+    """
+    n = max(2, axis_size)
+    eff_latency = link.latency + step_overhead
+    c_opt = math.sqrt((2 * n - 3) * nbytes / (link.bandwidth * eff_latency))
+    c = int(max(1.0, c_opt))
+    c = min(c, MAX_NUM_CHUNKS, max(1, nbytes // MIN_CHUNK_BYTES))
+    return c
+
+
+def two_level_group_sizes(n: int, group_size: Optional[int] = None):
+    """(g, m): groups of size ``g``, ``m`` groups, for the 2-D sqrt(n)
+    chain -- g grows until it divides n (static perms need even groups).
+    The effective chain length of the 2-D schedule is ~``g + m``, which is
+    what chunk autotuning must use (not the 1-D length n)."""
+    g = group_size or max(2, math.isqrt(n))
+    while n % g != 0:
+        g += 1
+    return g, n // g
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +152,7 @@ def pairwise_exchange_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
 def chain_allreduce(
     x: jax.Array,
     axis_name: str,
-    num_chunks: int = DEFAULT_NUM_CHUNKS,
+    num_chunks: Optional[int] = None,
 ) -> jax.Array:
     """Hoplite allreduce: pipelined chain-reduce into rank n-1 overlapped
     with a pipelined chain-broadcast back toward rank 0.
@@ -114,6 +160,8 @@ def chain_allreduce(
     Chunk k is fully reduced at rank n-1 at step k+n-2 and immediately
     begins its broadcast leg at step k+n-1 -- the broadcast of chunk k
     overlaps the reduction of chunks k+1..  (paper sections 4.2/4.3).
+
+    ``num_chunks=None`` autotunes C from the Appendix-A cost model.
     """
     n = lax.psum(1, axis_name)
     if n == 1:
@@ -121,7 +169,7 @@ def chain_allreduce(
     if n == 2:
         return pairwise_exchange_allreduce(x, axis_name)
     idx = lax.axis_index(axis_name)
-    C = num_chunks
+    C = num_chunks or autotune_num_chunks(n, x.size * x.dtype.itemsize)
     acc, orig = _to_chunks(x, C)  # partial-sum buffer (reduce direction)
     fin = jnp.zeros_like(acc)  # final-value buffer (broadcast direction)
     perm_up = [(i, i + 1) for i in range(n - 1)]
@@ -158,14 +206,14 @@ def chain_allreduce(
 
 
 def chain_reduce(
-    x: jax.Array, axis_name: str, num_chunks: int = DEFAULT_NUM_CHUNKS
+    x: jax.Array, axis_name: str, num_chunks: Optional[int] = None
 ) -> jax.Array:
     """Pipelined 1-D chain reduce into rank n-1 (others return partials)."""
     n = lax.psum(1, axis_name)
     if n == 1:
         return x
     idx = lax.axis_index(axis_name)
-    C = num_chunks
+    C = num_chunks or autotune_num_chunks(n, x.size * x.dtype.itemsize)
     acc, orig = _to_chunks(x, C)
     perm_up = [(i, i + 1) for i in range(n - 1)]
 
@@ -181,14 +229,14 @@ def chain_reduce(
 
 
 def chain_broadcast(
-    x: jax.Array, axis_name: str, num_chunks: int = DEFAULT_NUM_CHUNKS, root: str = "last"
+    x: jax.Array, axis_name: str, num_chunks: Optional[int] = None, root: str = "last"
 ) -> jax.Array:
     """Pipelined chain broadcast from rank n-1 (or 0) through every rank."""
     n = lax.psum(1, axis_name)
     if n == 1:
         return x
     idx = lax.axis_index(axis_name)
-    C = num_chunks
+    C = num_chunks or autotune_num_chunks(n, x.size * x.dtype.itemsize)
     buf, orig = _to_chunks(x, C)
     if root == "last":
         perm = [(i + 1, i) for i in range(n - 1)]
@@ -236,7 +284,7 @@ def binomial_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array
 def two_level_allreduce(
     x: jax.Array,
     axis_name: str,
-    num_chunks: int = DEFAULT_NUM_CHUNKS,
+    num_chunks: Optional[int] = None,
     group_size: Optional[int] = None,
 ) -> jax.Array:
     """The paper's 2-D chain: sqrt(n) chains of sqrt(n), then a chain over
@@ -249,12 +297,9 @@ def two_level_allreduce(
     n = lax.psum(1, axis_name)
     if n == 1:
         return x
-    g = group_size or max(2, math.isqrt(n))
-    while n % g != 0:  # need even groups for the static perm
-        g += 1
-    m = n // g  # number of groups... groups of size g
+    g, m = two_level_group_sizes(n, group_size)  # groups of size g, m groups
     idx = lax.axis_index(axis_name)
-    C = num_chunks
+    C = num_chunks or autotune_num_chunks(g + m, x.size * x.dtype.itemsize)
     buf, orig = _to_chunks(x, C)
     in_group_pos = idx % g
     group_id = idx // g
@@ -391,10 +436,15 @@ def rs_ag_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveConfig:
-    """Selection policy for one mesh axis (paper section 4.3 + App. A)."""
+    """Selection policy for one mesh axis (paper section 4.3 + App. A).
+
+    ``num_chunks=None`` (the default) derives the chunk count per
+    collective from the Appendix-A cost model -- ``autotune_num_chunks``
+    over (axis_size, nbytes, link, step_overhead).  An explicit integer
+    pins it (benchmark sweeps, regression repro)."""
 
     link: LinkSpec = ICI_LINK
-    num_chunks: int = DEFAULT_NUM_CHUNKS
+    num_chunks: Optional[int] = None
     small_bytes: int = SMALL_TENSOR_BYTES
     # per-ppermute-step software overhead (launch + sync), seconds; this is
     # the 'L' that actually matters for chunked schedules on TPU.
@@ -402,6 +452,20 @@ class CollectiveConfig:
 
     def effective_latency(self) -> float:
         return self.link.latency + self.step_overhead
+
+    def chunks_for(self, axis_size: int, nbytes: int) -> int:
+        """Chunk count for a 1-D chain over ``axis_size`` ranks."""
+        if self.num_chunks is not None:
+            return self.num_chunks
+        return autotune_num_chunks(axis_size, nbytes, self.link, self.step_overhead)
+
+    def chunks_for_2d(self, axis_size: int, nbytes: int) -> int:
+        """Chunk count for the 2-D schedule, whose chain length is the
+        two-level g + m, not the 1-D axis_size."""
+        if self.num_chunks is not None:
+            return self.num_chunks
+        g, m = two_level_group_sizes(axis_size)
+        return autotune_num_chunks(g + m, nbytes, self.link, self.step_overhead)
 
     def choose(self, axis_size: int, nbytes: int) -> str:
         if nbytes < self.small_bytes or axis_size <= 2:
@@ -413,7 +477,7 @@ class CollectiveConfig:
 
 
 ICI_CONFIG = CollectiveConfig(link=ICI_LINK)
-DCN_CONFIG = CollectiveConfig(link=DCN_LINK, num_chunks=32, step_overhead=10e-6)
+DCN_CONFIG = CollectiveConfig(link=DCN_LINK, step_overhead=10e-6)
 
 
 def hoplite_psum(
@@ -430,12 +494,13 @@ def hoplite_psum(
       * n*B*L  > S            -> 2-D sqrt(n) chain allreduce
     """
     n = axis_size if axis_size is not None else lax.psum(1, axis_name)
-    method = config.choose(n, x.size * x.dtype.itemsize)
+    nbytes = x.size * x.dtype.itemsize
+    method = config.choose(n, nbytes)
     if method == "psum":
         return lax.psum(x, axis_name)
     if method == "chain2d":
-        return two_level_allreduce(x, axis_name, config.num_chunks)
-    return chain_allreduce(x, axis_name, config.num_chunks)
+        return two_level_allreduce(x, axis_name, config.chunks_for_2d(n, nbytes))
+    return chain_allreduce(x, axis_name, config.chunks_for(n, nbytes))
 
 
 def grad_sync(
@@ -458,9 +523,13 @@ def grad_sync(
         elif method == "hoplite":
             out = hoplite_psum(g, axis_name, config)
         elif method == "chain":
-            out = chain_allreduce(g, axis_name, config.num_chunks)
+            out = chain_allreduce(
+                g, axis_name, config.chunks_for(n, g.size * g.dtype.itemsize)
+            )
         elif method == "chain2d":
-            out = two_level_allreduce(g, axis_name, config.num_chunks)
+            out = two_level_allreduce(
+                g, axis_name, config.chunks_for_2d(n, g.size * g.dtype.itemsize)
+            )
         elif method == "rs_ag":
             out = rs_ag_allreduce(g, axis_name)
         else:

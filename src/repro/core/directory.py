@@ -117,7 +117,8 @@ class ObjectDirectory:
 
     def locations(self, object_id: str) -> List[Location]:
         shard = self._shard(object_id)
-        return list(shard.locations[object_id].values())
+        entry = shard.locations.get(object_id)
+        return list(entry.values()) if entry else []
 
     def checkout_location(
         self, object_id: str, *, remove: bool = True, exclude: Optional[int] = None
@@ -171,35 +172,81 @@ class ObjectDirectory:
 
     def unsubscribe(self, object_id: str, callback: Callable) -> None:
         shard = self._shard(object_id)
+        lst = shard.subscribers.get(object_id)
+        if lst is None:
+            return
         try:
-            shard.subscribers[object_id].remove(callback)
+            lst.remove(callback)
         except ValueError:
             pass
+        if not lst:
+            # Drop the emptied key: with per-request object ids, leaving
+            # one empty list per id ever waited on accretes without bound
+            # (same concern as the tombstone cap above).
+            shard.subscribers.pop(object_id, None)
 
     # -- deletion / failures -------------------------------------------------
 
     def delete(self, object_id: str) -> List[int]:
-        """Remove all copies; returns the nodes that held one."""
+        """Remove all copies; returns the nodes that held one.
+
+        Subscribers are notified BEFORE the entry is dropped: a waiter
+        blocked on this object must wake and observe the deletion (it will
+        see no locations and a tombstone) instead of sleeping to its
+        deadline."""
         shard = self._shard(object_id)
         nodes = list(shard.locations[object_id].keys()) + list(
             shard.checked_out[object_id].keys()
         )
+        shard.deleted[object_id] = None
+        self._notify(shard, object_id)
         shard.locations.pop(object_id, None)
         shard.checked_out.pop(object_id, None)
         shard.inline.pop(object_id, None)
         shard.size.pop(object_id, None)
-        shard.subscribers.pop(object_id, None)
-        shard.deleted[object_id] = None
+        # Subscribers are NOT popped: a still-registered waiter (e.g. a
+        # reduce source that may be revived by a re-Put) must keep
+        # receiving events; each waiter unsubscribes itself when done.
         while len(shard.deleted) > _TOMBSTONES_PER_SHARD:
             shard.deleted.popitem(last=False)
         return nodes
 
     def drop_location(self, object_id: str, node: int) -> None:
         """Invalidate a stale location (e.g. the copy was evicted under
-        capacity pressure): remove it whether live or checked out."""
+        capacity pressure, or an abandoned in-flight partial): remove it
+        whether live or checked out, and wake the object's subscribers so
+        waiters can observe the loss (possibly raising ObjectLost) instead
+        of sleeping to their deadline."""
         shard = self._shard(object_id)
-        shard.locations[object_id].pop(node, None)
-        shard.checked_out[object_id].pop(node, None)
+        locs = shard.locations.get(object_id)
+        co = shard.checked_out.get(object_id)
+        dropped = locs is not None and locs.pop(node, None) is not None
+        dropped |= co is not None and co.pop(node, None) is not None
+        if dropped:
+            self._notify(shard, object_id)
+
+    def is_available(self, object_id: str) -> bool:
+        """Any copy (complete, partial, or in-flight checked-out) or inline
+        entry still exists -- the non-raising form of assert_available.
+        Read via .get(): subscripting the defaultdicts would re-insert an
+        empty entry per queried (possibly deleted) id, accreting memory."""
+        shard = self._shard(object_id)
+        return bool(
+            shard.locations.get(object_id)
+            or shard.checked_out.get(object_id)
+            or object_id in shard.inline
+        )
+
+    def available_elsewhere(self, object_id: str, node: int) -> bool:
+        """Like is_available, but ignoring copies held by ``node`` itself:
+        a receiver's own partial cannot feed its own fetch, so when this
+        returns False the fetch can only end in ObjectLost."""
+        shard = self._shard(object_id)
+        if object_id in shard.inline:
+            return True
+        if any(n != node for n in shard.locations.get(object_id, ())):
+            return True
+        return any(n != node for n in shard.checked_out.get(object_id, ()))
 
     def is_deleted(self, object_id: str) -> bool:
         return object_id in self._shard(object_id).deleted
@@ -210,24 +257,28 @@ class ObjectDirectory:
 
     def fail_node(self, node: int) -> List[str]:
         """Drop every location on a failed node; returns object IDs that
-        lost their LAST copy (the framework must recover those, section 7)."""
+        lost their LAST copy (the framework must recover those, section 7).
+
+        Every object that lost a location has its subscribers notified so
+        event-driven waiters re-examine the entry (and can raise
+        ObjectLost immediately when the last copy vanished)."""
         orphaned = []
+        affected = []
         for shard in self.shards:
             for object_id in list(shard.locations.keys()):
-                shard.locations[object_id].pop(node, None)
-                shard.checked_out[object_id].pop(node, None)
+                dropped = shard.locations[object_id].pop(node, None) is not None
+                dropped |= shard.checked_out[object_id].pop(node, None) is not None
+                if dropped:
+                    affected.append((shard, object_id))
                 if not shard.locations[object_id] and not shard.checked_out[object_id]:
                     if object_id not in shard.inline:
                         orphaned.append(object_id)
+        for shard, object_id in affected:
+            self._notify(shard, object_id)
         return orphaned
 
     def assert_available(self, object_id: str) -> None:
-        shard = self._shard(object_id)
-        if (
-            not shard.locations[object_id]
-            and not shard.checked_out[object_id]
-            and object_id not in shard.inline
-        ):
+        if not self.is_available(object_id):
             raise ObjectLost(object_id)
 
 
@@ -278,7 +329,14 @@ class ReplicatedDirectory(ObjectDirectory):
         return orphaned
 
     def fail_primary(self) -> "ObjectDirectory":
-        """Simulate primary loss: promote replica 0 to primary state."""
+        """Simulate primary loss: promote replica 0 to primary state.
+
+        Subscriptions are *client* state, not replicated directory state:
+        carry them over to the promoted shards (same shard count, same
+        hash -> shard mapping) or every blocked waiter would silently stop
+        receiving publication events after failover."""
         promoted = self.replicas[0]
+        for old, new in zip(self.shards, promoted.shards):
+            new.subscribers = old.subscribers
         self.shards = promoted.shards
         return self

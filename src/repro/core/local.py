@@ -11,14 +11,30 @@ recovery re-fetches from surviving copies).
 Transfers stream chunk-by-chunk gated on the *source's* progress, so a
 partial copy genuinely forwards data it has only partially received --
 the real pipelining mechanism, not a mock of it.
+
+Concurrency model (README "Data-plane concurrency model"):
+
+  * Data plane: every ``ChunkedBuffer`` owns its progress watermark (its
+    own lock + condition).  Senders gate on ``wait_for_bytes``; writers
+    signal only that buffer's waiters.  Disjoint transfers share no lock.
+  * Control plane: one directory lock (``_dir_lock``) guards the
+    directory, object metadata, the per-node store maps and cluster
+    membership.  Threads that must wait for *directory state* (a location
+    to appear, a source to complete) subscribe to per-object-id events --
+    ``ObjectDirectory.subscribe`` callbacks fired by ``publish_*`` /
+    ``delete`` / ``fail_node`` -- instead of polling a global condition.
+  * Lock ordering: the directory lock is never acquired while holding a
+    buffer lock; buffer locks are innermost and never held across a
+    directory or store call.
 """
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,11 +49,28 @@ from repro.core.api import (
 from repro.core.directory import ObjectDirectory, ReplicatedDirectory
 from repro.core.planner import LinkSpec, EC2_LINK, use_two_dimensional
 from repro.core.scheduler import ChainState, partition_groups
-from repro.core.store import ChunkedBuffer, NodeStore
+from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore
 
 
 class DeadNode(RuntimeError):
-    pass
+    def __init__(self, node):
+        super().__init__(str(node))
+        try:
+            self.node_id = int(node)
+        except (TypeError, ValueError):
+            self.node_id = None
+
+
+class StaleBuffer(RuntimeError):
+    """The source buffer was failed/abandoned but its node is alive
+    (restart, or an abandoned in-flight partial): drop that one location
+    and retry another source -- do NOT declare the whole node dead."""
+
+
+# Sentinel timeout for watermark waits: bounds how long a reader sleeps
+# before re-checking cluster membership (it is normally woken long before
+# this by the buffer's own condition or its ``fail()``).
+_WATERMARK_RECHECK_S = 5.0
 
 
 class LocalCluster:
@@ -57,28 +90,39 @@ class LocalCluster:
         self.chunk_size = chunk_size
         self.link = link
         self.pace = pace
+        self.store_capacity = store_capacity
         self.directory = ReplicatedDirectory(num_replicas=directory_replicas)
-        self.stores = [NodeStore(i, store_capacity) for i in range(num_nodes)]
+        self._stats = DataPlaneStats()
+        self.stores = [
+            NodeStore(i, store_capacity, stats=self._stats) for i in range(num_nodes)
+        ]
         self.meta: Dict[str, Tuple[np.dtype, tuple]] = {}
         self.dead: set = set()
-        self.lock = threading.RLock()
-        self.cv = threading.Condition(self.lock)
+        # Control-plane (directory) lock; exposed as ``lock`` for
+        # compatibility.  The data plane does NOT take it per chunk.
+        self._dir_lock = threading.RLock()
+        self.lock = self._dir_lock
+        # Events of threads blocked on directory state; set on membership
+        # changes (fail/restart/failover) so waiters re-check promptly.
+        self._membership_waiters: set = set()
         self._threads: List[threading.Thread] = []
         # instrumentation
+        self._stats_lock = threading.Lock()
         self.bytes_sent_per_node = [0] * num_nodes
         self.transfers: List[Tuple[int, int, str]] = []  # (src, dst, oid)
 
     # -- helpers -------------------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Data-plane contention counters (see store.DataPlaneStats)."""
+        return self._stats.as_dict()
 
     def _spawn(self, fn, *args) -> threading.Thread:
         t = threading.Thread(target=fn, args=args, daemon=True)
         t.start()
         self._threads.append(t)
         return t
-
-    def _notify(self):
-        with self.cv:
-            self.cv.notify_all()
 
     def _check_alive(self, node: int):
         if node in self.dead:
@@ -89,22 +133,85 @@ class LocalCluster:
         for t in self._threads:
             t.join(max(0.0, deadline - time.time()))
 
+    def _await_directory(
+        self,
+        object_ids: Sequence[str],
+        attempt: Callable[[], Optional[object]],
+        deadline: float,
+        what: str = "",
+    ):
+        """Event-driven directory wait: run ``attempt()`` under the
+        directory lock until it returns non-None, re-trying whenever one
+        of ``object_ids`` is (re)published/deleted or cluster membership
+        changes.  ``attempt`` may raise (ObjectLost, DeadNode) to abort.
+
+        Replaces the old cluster-global condition variable: only threads
+        interested in these object ids are woken by their events.
+        """
+        ids = list(dict.fromkeys(object_ids))
+        ev = threading.Event()
+
+        def cb(_oid):
+            ev.set()
+
+        with self._dir_lock:
+            result = attempt()
+            if result is not None:
+                return result
+            for oid in ids:
+                self.directory.subscribe(oid, cb)
+            self._membership_waiters.add(ev)
+        try:
+            while True:
+                remaining = deadline - time.time()
+                if remaining <= 0 or not ev.wait(timeout=remaining):
+                    raise TimeoutError(what or f"directory wait on {ids[:3]}")
+                ev.clear()
+                self._stats.dir_wakeups += 1
+                with self._dir_lock:
+                    result = attempt()
+                    if result is not None:
+                        return result
+        finally:
+            with self._dir_lock:
+                for oid in ids:
+                    self.directory.unsubscribe(oid, cb)
+                self._membership_waiters.discard(ev)
+
+    def _wake_membership_waiters(self) -> None:
+        """Caller must hold the directory lock."""
+        for ev in self._membership_waiters:
+            ev.set()
+
+    def _object_lost(self, object_id: str) -> bool:
+        """True when the object WAS created (meta or tombstone exists) but
+        no copy, in-flight transfer, or inline entry survives.  An object
+        that merely has not been Put yet is NOT lost -- reduce sources may
+        legitimately arrive later.  Caller holds the directory lock."""
+        if self.directory.is_available(object_id):
+            return False
+        return object_id in self.meta or self.directory.is_deleted(object_id)
+
     # -- Put -------------------------------------------------------------------
 
     def put(self, node: int, object_id: str, value: np.ndarray) -> str:
         """Synchronous Put (the executor->store copy is instant in-process;
         the *pipelining* this copy needs on a real deployment is exercised
         in the simulator)."""
-        self._check_alive(node)
         value = np.asarray(value)
-        with self.lock:
+        with self._dir_lock:
+            # Aliveness must be decided under the directory lock: checked
+            # outside it, a concurrent fail_node can wipe this node between
+            # the check and the publish, leaving a permanent stale COMPLETE
+            # location at a dead node (waiters filter it but see the object
+            # as "available" -- the serving-tail stall).
+            self._check_alive(node)
             self.directory.revive(object_id)  # explicit re-Put clears tombstone
             self.meta[object_id] = (value.dtype, value.shape)
             buf = self.stores[node].put_array(object_id, value, self.chunk_size)
             if buf.size < SMALL_OBJECT_THRESHOLD:
                 self.directory.publish_inline(object_id, value.copy(), buf.size)
             self.directory.publish_complete(object_id, node, buf.size)
-        self._notify()
         return object_id
 
     # -- Get -------------------------------------------------------------------
@@ -113,7 +220,7 @@ class LocalCluster:
         """Blocking receiver-driven Get with relay through partial copies."""
         self._check_alive(node)
         deadline = time.time() + timeout
-        with self.lock:
+        with self._dir_lock:
             inline = self.directory.get_inline(object_id)
             if inline is not None:
                 return np.array(inline)
@@ -122,7 +229,7 @@ class LocalCluster:
                 dtype, shape = self.meta[object_id]
                 return local.to_array(dtype, shape).copy()
         buf = self._fetch(node, object_id, deadline)
-        with self.lock:
+        with self._dir_lock:
             meta = self.meta.get(object_id)
             if meta is None:  # deleted immediately after the transfer
                 raise ObjectLost(object_id)
@@ -131,21 +238,32 @@ class LocalCluster:
 
     def _fetch(self, node: int, object_id: str, deadline: float) -> ChunkedBuffer:
         """Pull object into ``node``'s store, retrying on sender failure."""
-        while True:
-            with self.cv:
+
+        def attempt():
+            """Check out a usable sender; None -> wait for a publication.
+            Returns ("done", buf) when a sibling fetch already completed
+            our local copy, else ("xfer", loc, size, src_buf, dst_buf)."""
+            if node in self.dead:
+                # The receiver itself was killed mid-protocol: abort
+                # instead of re-advertising a partial at a dead node.
+                raise DeadNode(str(node))
+            while True:
+                mine = self.stores[node].get(object_id)
+                if mine is not None and mine.complete:
+                    return ("done", mine)  # completed concurrently here
                 loc = self.directory.checkout_location(
                     object_id, remove=True, exclude=node
                 )
-                if loc is None or loc.node in self.dead:
-                    if loc is not None:  # stale location on a dead node
-                        self.directory.return_location(object_id, loc.node)
-                        self.directory.fail_node(loc.node)
-                        continue
-                    self.directory.assert_available(object_id)
-                    if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
-                        raise TimeoutError(f"Get({object_id}) timed out")
+                if loc is None:
+                    if not self.directory.available_elsewhere(object_id, node):
+                        # Only our own (incomplete) partial remains -- no
+                        # sender can ever feed it: the object is lost.
+                        raise ObjectLost(object_id)
+                    return None
+                if loc.node in self.dead:  # stale location on a dead node
+                    self.directory.return_location(object_id, loc.node)
+                    self.directory.fail_node(loc.node)
                     continue
-                size = self.directory.size_of(object_id)
                 src_buf = self.stores[loc.node].get(object_id)
                 if src_buf is None:
                     # Stale location: the copy was LRU-evicted under
@@ -153,55 +271,118 @@ class LocalCluster:
                     # and retry another source.
                     self.directory.drop_location(object_id, loc.node)
                     continue
+                size = self.directory.size_of(object_id)
                 dst_buf = self.stores[node].get(object_id)
                 if dst_buf is None:
                     dst_buf = self.stores[node].create(
                         object_id, size, pinned=False, chunk_size=self.chunk_size
                     )
                 self.directory.publish_partial(object_id, node, size)
+                return ("xfer", loc, size, src_buf, dst_buf)
+
+        while True:
             try:
-                self._stream_copy(loc.node, node, src_buf, dst_buf)
-            except DeadNode:
-                with self.cv:
+                result = self._await_directory(
+                    [object_id], attempt, deadline, what=f"Get({object_id}) timed out"
+                )
+            except (ObjectLost, TimeoutError):
+                # We may have published a partial that no sender will ever
+                # finish feeding: withdraw it and fail its buffer so every
+                # receiver chained off us observes the loss NOW (and can
+                # reconstruct) instead of riding its own deadline.
+                self._abandon_partial(node, object_id)
+                raise
+            if result[0] == "done":
+                return result[1]
+            _, loc, size, src_buf, dst_buf = result
+            try:
+                self._stream_copy(loc.node, node, src_buf, dst_buf, object_id)
+            except DeadNode as e:
+                if e.node_id != loc.node:
+                    # The RECEIVER died, not the sender: failing loc.node
+                    # would wipe a healthy node's directory entries.  Hand
+                    # the sender slot back (or it stays checked out forever
+                    # and starves every other receiver) and abort.
+                    with self._dir_lock:
+                        self.directory.return_location(object_id, loc.node)
+                    raise
+                with self._dir_lock:
                     self.directory.fail_node(loc.node)
                 continue
-            with self.cv:
+            except StaleBuffer:
+                # The sender's copy was abandoned/restarted away, but its
+                # node is alive: invalidate that single location and retry.
+                with self._dir_lock:
+                    self.directory.drop_location(object_id, loc.node)
+                continue
+            with self._dir_lock:
                 if self.directory.is_deleted(object_id) or object_id not in self.meta:
                     # Deleted mid-transfer: drop our copy instead of
                     # silently re-adding the object at check-in.
                     self.stores[node].delete(object_id)
                     self.directory.return_location(object_id, loc.node)  # drops tombstoned loc
-                    self.cv.notify_all()
                     raise ObjectLost(object_id)
+                if node in self.dead:
+                    # Receiver died between the last streamed window and
+                    # check-in: publishing would advertise a copy at a
+                    # dead node forever.
+                    self.directory.return_location(object_id, loc.node)
+                    raise DeadNode(str(node))
                 self.directory.publish_complete(object_id, node, size)
                 self.directory.return_location(object_id, loc.node)
-                self.cv.notify_all()
             return dst_buf
 
+    def _abandon_partial(self, node: int, object_id: str) -> None:
+        """A fetch gave up (object lost / deadline): if we hold only an
+        incomplete partial, withdraw its directory advertisement and drop
+        it.  NodeStore.delete fails the incomplete buffer, so downstream
+        relays chained off it fail over or observe ObjectLost promptly."""
+        with self._dir_lock:
+            candidate = self.stores[node].get(object_id)
+            if candidate is not None and not candidate.complete:
+                self.stores[node].delete(object_id)  # fails the buffer
+                self.directory.drop_location(object_id, node)  # notifies waiters
+
     def _stream_copy(
-        self, src: int, dst: int, src_buf: ChunkedBuffer, dst_buf: ChunkedBuffer
+        self,
+        src: int,
+        dst: int,
+        src_buf: ChunkedBuffer,
+        dst_buf: ChunkedBuffer,
+        object_id: str,
     ):
-        """Chunk-pipelined copy gated on source progress."""
-        n = src_buf.num_chunks()
-        for k in range(n):
-            hi = min(src_buf.size, (k + 1) * src_buf.chunk_size)
-            with self.cv:
-                while src_buf.bytes_present < hi:
-                    if src in self.dead:
-                        raise DeadNode(str(src))
-                    self.cv.wait(timeout=5.0)
-                if src in self.dead:
-                    raise DeadNode(str(src))
-                chunk = src_buf.read_chunk(k).copy()
+        """Windowed zero-copy pipelined copy gated on source progress.
+
+        Each iteration drains every byte the source has made available
+        since the last one (one lock acquisition per *window*, not per
+        chunk) and forwards it as a single zero-copy view; ``write_chunk``
+        advances the destination watermark, waking only its own waiters.
+        With ``pace`` set, windows are capped at one chunk to preserve the
+        chunk-granular interleaving the pipelining tests rely on.
+        """
+        pos = 0
+        total = src_buf.size
+        while pos < total:
+            avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+            if src in self.dead:
+                raise DeadNode(str(src))
+            if src_buf.failed:
+                raise StaleBuffer(f"{object_id}@{src}")
+            if avail <= pos:
+                continue  # timed out: re-check membership, wait again
             if self.pace:
+                avail = min(avail, pos + src_buf.chunk_size)
                 time.sleep(self.pace)
-            with self.cv:
-                if dst in self.dead:
-                    raise DeadNode(str(dst))
-                dst_buf.write_chunk(k * src_buf.chunk_size, chunk)
-                self.bytes_sent_per_node[src] += chunk.size
-                self.transfers.append((src, dst, src_buf and dst_buf and ""))
-                self.cv.notify_all()
+            if dst in self.dead:
+                raise DeadNode(str(dst))
+            window = src_buf.view(pos, avail)  # immutable below watermark
+            dst_buf.write_chunk(pos, window)
+            self._stats.windows += 1
+            with self._stats_lock:
+                self.bytes_sent_per_node[src] += avail - pos
+            pos = avail
+        with self._stats_lock:
+            self.transfers.append((src, dst, object_id))
 
     def get_async(self, node: int, object_id: str, timeout: float = 30.0) -> Future:
         fut: Future = Future()
@@ -238,17 +419,23 @@ class LocalCluster:
             groups = partition_groups(list(source_ids))
             sub_ids = []
             futs = []
-            for gi, group in enumerate(groups):
-                sub_id = f"{target_id}/g{gi}"
-                coord = self._first_location(group, deadline, fallback=node)
-                sub_ids.append(sub_id)
-                futs.append(self._reduce_async(coord, sub_id, group, op, deadline))
-            for f in futs:
-                f.result(timeout=max(0.0, deadline - time.time()))
-            out = self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
-            for sid in sub_ids:  # group partials are internal: reclaim them
-                self.delete(sid)
-            return out
+            try:
+                for gi, group in enumerate(groups):
+                    sub_id = f"{target_id}/g{gi}"
+                    coord = self._first_location(group, deadline, fallback=node)
+                    sub_ids.append(sub_id)
+                    futs.append(self._reduce_async(coord, sub_id, group, op, deadline))
+                for f in futs:
+                    f.result(timeout=max(0.0, deadline - time.time()))
+                return self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
+            finally:
+                # Group partials are internal: reclaim them on success AND
+                # on failure (they are pinned at their coordinators and
+                # would leak one set per failed/retried reduce).  A sub-
+                # reduce still running past a failure may re-create its
+                # sub_id afterwards; its own failure paths bound that.
+                for sid in sub_ids:
+                    self.delete(sid)
         return self._reduce_chain_blocking(node, target_id, list(source_ids), op, deadline)
 
     def _reduce_async(self, node, target_id, source_ids, op, deadline) -> Future:
@@ -266,68 +453,144 @@ class LocalCluster:
         return fut
 
     def _wait_any_meta(self, source_ids, deadline) -> str:
-        with self.cv:
-            while True:
-                for oid in source_ids:
-                    if oid in self.meta:
-                        return oid
-                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
-                    raise TimeoutError("reduce: no source metadata")
+        def attempt():
+            for oid in source_ids:
+                if oid in self.meta:
+                    return oid
+            if all(self.directory.is_deleted(oid) for oid in source_ids):
+                # Every source was created and deleted (request cancelled
+                # mid-reduce): no metadata is ever coming.
+                raise ObjectLost(f"reduce: all sources deleted: {list(source_ids)}")
+            return None
+
+        return self._await_directory(
+            source_ids, attempt, deadline, what="reduce: no source metadata"
+        )
 
     def _first_location(self, source_ids, deadline, fallback: Optional[int] = None) -> int:
         """Node of the first-ready source in a group (sub-coordinator).
 
         A source may exist only as a directory inline entry (its producing
         node died after a small-object Put); it has no location, so the
-        group is coordinated at ``fallback`` instead of spinning until the
+        group is coordinated at ``fallback`` instead of blocking until the
         deadline."""
-        with self.cv:
-            while True:
-                inline_ready = False
-                for oid in source_ids:
-                    locs = self.directory.locations(oid)
-                    for l in locs:
-                        if l.progress is Progress.COMPLETE and l.node not in self.dead:
-                            return l.node
-                    inline_ready = inline_ready or self.directory.get_inline(oid) is not None
-                if inline_ready and fallback is not None:
-                    return fallback
-                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
-                    raise TimeoutError("reduce: no group coordinator")
+
+        def attempt():
+            inline_ready = False
+            all_lost = True
+            for oid in source_ids:
+                for l in self.directory.locations(oid):
+                    if l.progress is Progress.COMPLETE and l.node not in self.dead:
+                        return l.node
+                inline_ready = inline_ready or self.directory.get_inline(oid) is not None
+                all_lost = all_lost and self._object_lost(oid)
+            if inline_ready and fallback is not None:
+                return fallback
+            if all_lost:
+                # Every source in the group was created and then vanished
+                # (failures/deletes): fail fast so the caller's recovery
+                # runs, instead of hunting a coordinator until deadline.
+                raise ObjectLost(f"reduce group lost all sources: {list(source_ids)}")
+            return None
+
+        return self._await_directory(
+            source_ids, attempt, deadline, what="reduce: no group coordinator"
+        )
 
     def _reduce_chain_blocking(
         self, node: int, target_id: str, source_ids: List[str], op: ReduceOp, deadline
     ) -> str:
-        """Arrival-order 1-D chain with streaming hop execution."""
+        """Arrival-order 1-D chain driven by directory completion events.
+
+        Each source id carries its own subscription; a publication pushes
+        that id onto the ready queue, so the loop examines only the ids
+        that actually changed -- O(events) total work instead of the old
+        O(pending^2) full re-scan on every cluster-global wakeup."""
         chain = ChainState(node, tag=target_id)
-        pending = set(source_ids)
         hop_futures: List[Future] = []
         intermediates: List[str] = []  # chain-generated partials to reclaim
         first = self._wait_any_meta(source_ids, deadline)
         dtype, shape = self.meta[first]
-        while pending:
-            ready = None
-            with self.cv:
-                while ready is None:
-                    for oid in list(pending):
+        try:
+            return self._run_chain(
+                chain, node, target_id, source_ids, op, deadline,
+                dtype, shape, hop_futures, intermediates,
+            )
+        finally:
+            # Reclaim chain partials on success AND failure (hop outputs
+            # are pinned at their nodes; a failed reduce must not leak one
+            # pinned set per retry).  Deleting an intermediate a still-
+            # running hop consumes fails its buffer, waking that hop into
+            # its own error path instead of its deadline.
+            for iid in intermediates:
+                self.delete(iid)
+
+    def _run_chain(
+        self, chain, node, target_id, source_ids, op, deadline,
+        dtype, shape, hop_futures, intermediates,
+    ) -> str:
+        pending = set(source_ids)
+        ready_q: collections.deque = collections.deque()
+        ev = threading.Event()
+
+        def cb(oid):
+            ready_q.append(oid)
+            ev.set()
+
+        ids = list(dict.fromkeys(source_ids))
+        with self._dir_lock:
+            for oid in ids:
+                self.directory.subscribe(oid, cb)  # fires now if already published
+            self._membership_waiters.add(ev)
+            # Seed every id once: a source lost BEFORE we subscribed has no
+            # locations left to fire an event, but must still be examined
+            # (and fail the reduce) on the first pass.
+            ready_q.extend(ids)
+            ev.set()
+        try:
+            while pending:
+                remaining = deadline - time.time()
+                if remaining <= 0 or not ev.wait(timeout=remaining):
+                    raise TimeoutError(f"reduce: sources never ready: {pending}")
+                ev.clear()
+                self._stats.dir_wakeups += 1
+                # The receiver itself may have been killed mid-chain
+                # (membership events wake us): fail fast, the reduce can
+                # never complete into a dead node.
+                self._check_alive(node)
+                while ready_q:
+                    oid = ready_q.popleft()
+                    if oid not in pending:
+                        continue
+                    with self._dir_lock:
                         locs = [
                             l
                             for l in self.directory.locations(oid)
-                            if l.progress is Progress.COMPLETE and l.node not in self.dead
+                            if l.progress is Progress.COMPLETE
+                            and l.node not in self.dead
                         ]
-                        if locs or self.directory.get_inline(oid) is not None:
-                            src = locs[0].node if locs else node
-                            ready = (oid, src)
-                            break
-                    if ready is None:
-                        if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
-                            raise TimeoutError(f"reduce: sources never ready: {pending}")
-            oid, src = ready
-            pending.discard(oid)
-            hop = chain.on_ready(src, oid)
-            if hop is not None:
-                intermediates.append(hop.out_object)
-                hop_futures.append(self._exec_hop_async(hop, dtype, shape, op, deadline))
+                        has_inline = self.directory.get_inline(oid) is not None
+                        lost = not locs and not has_inline and self._object_lost(oid)
+                    if lost:
+                        # This source was created and then lost for good
+                        # (delete / failure drop): fail the reduce now, the
+                        # framework's recovery owns it (section 7).
+                        raise ObjectLost(oid)
+                    if not locs and not has_inline:
+                        continue  # partial publication; completion will re-fire
+                    src = locs[0].node if locs else node
+                    pending.discard(oid)
+                    hop = chain.on_ready(src, oid)
+                    if hop is not None:
+                        intermediates.append(hop.out_object)
+                        hop_futures.append(
+                            self._exec_hop_async(hop, dtype, shape, op, deadline)
+                        )
+        finally:
+            with self._dir_lock:
+                for oid in ids:
+                    self.directory.unsubscribe(oid, cb)
+                self._membership_waiters.discard(ev)
         for f in hop_futures:
             f.result(timeout=max(0.0, deadline - time.time()))
         # Final hop into the receiver + fold receiver-local objects.
@@ -341,16 +604,14 @@ class LocalCluster:
             acc = val.astype(dtype, copy=True) if acc is None else op(acc, val)
         assert acc is not None, "empty reduce"
         self.put(node, target_id, acc.reshape(shape))
-        # Reclaim chain partials (hop outputs are pinned at their nodes and
-        # would otherwise accumulate one set per reduce).  The receiver-side
-        # staging copy made by _fetch_from is never published, so Delete
-        # cannot find it through the directory: drop it here -- but only
-        # when the receiver holds no *published* copy of that id (it might,
-        # if the same object was Get here earlier).
-        for iid in intermediates:
-            self.delete(iid)
+        # Chain partials (intermediates) are reclaimed by the caller's
+        # finally.  The receiver-side staging copy made by _fetch_from is
+        # never published, so Delete cannot find it through the directory:
+        # drop it here -- but only when the receiver holds no *published*
+        # copy of that id (it might, if the same object was Get here
+        # earlier).
         if final is not None:
-            with self.cv:
+            with self._dir_lock:
                 published_here = any(
                     l.node == node
                     for l in self.directory.locations(final.src_object)
@@ -361,28 +622,60 @@ class LocalCluster:
 
     def _exec_hop_async(self, hop, dtype, shape, op, deadline) -> Future:
         """Run one chain hop: dst streams src's partial result in and
-        reduces it with its local object chunk-by-chunk."""
+        reduces it with its local object window-by-window."""
         fut: Future = Future()
 
         def run():
             try:
                 size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
-                with self.lock:
+
+                def attempt():
+                    """The upstream hop's thread may not have created its
+                    output buffer yet: wait for its publish_partial event
+                    instead of failing (or polling) -- the hop-issue race."""
+                    if hop.src_node in self.dead:
+                        raise ObjectLost(hop.src_object)
+                    src_buf = self.stores[hop.src_node].get(hop.src_object)
+                    if src_buf is None:
+                        if self._object_lost(hop.src_object):
+                            # The upstream intermediate was deleted (e.g. a
+                            # failed reduce's cleanup) or lost: it will
+                            # never be created -- fail the hop now.
+                            raise ObjectLost(hop.src_object)
+                        return None
                     self.meta[hop.out_object] = (np.dtype(dtype), tuple(shape))
                     local_buf = self.stores[hop.dst_node].get(hop.dst_object)
                     if local_buf is None:
                         raise ObjectLost(hop.dst_object)
-                    src_buf = self.stores[hop.src_node].get(hop.src_object)
-                    if src_buf is None:  # source node wiped by a failure
-                        raise ObjectLost(hop.src_object)
                     out = self.stores[hop.dst_node].create(
                         hop.out_object, size, pinned=True, chunk_size=self.chunk_size
                     )
                     self.directory.publish_partial(hop.out_object, hop.dst_node, size)
-                self._stream_reduce(hop.src_node, hop.dst_node, src_buf, local_buf, out, dtype, op)
-                with self.cv:
+                    return src_buf, local_buf, out
+
+                src_buf, local_buf, out = self._await_directory(
+                    [hop.src_object],
+                    attempt,
+                    deadline,
+                    what=f"reduce hop: source {hop.src_object} never appeared",
+                )
+                try:
+                    self._stream_reduce(
+                        hop.src_node,
+                        hop.dst_node,
+                        src_buf,
+                        local_buf,
+                        out,
+                        dtype,
+                        op,
+                        object_id=hop.out_object,
+                    )
+                except StaleBuffer as e:
+                    raise ObjectLost(hop.src_object) from e
+                with self._dir_lock:
+                    if hop.dst_node in self.dead:
+                        raise ObjectLost(hop.out_object)
                     self.directory.publish_complete(hop.out_object, hop.dst_node, size)
-                    self.cv.notify_all()
                 fut.set_result(hop.out_object)
             except BaseException as e:  # noqa: BLE001
                 fut.set_exception(e)
@@ -390,78 +683,114 @@ class LocalCluster:
         self._spawn(run)
         return fut
 
-    def _stream_reduce(self, src, dst, src_buf, local_buf, out, dtype, op):
-        """out[k] = op(src[k], local[k]) chunk-by-chunk, gated on src
-        progress -- the streaming add of a reduce hop."""
+    def _stream_reduce(self, src, dst, src_buf, local_buf, out, dtype, op, object_id: str = ""):
+        """out[w] = op(src[w], local[w]) window-by-window, gated on src
+        progress -- the streaming add of a reduce hop, vectorized over
+        every chunk available per wakeup."""
         itemsize = np.dtype(dtype).itemsize
         assert self.chunk_size % itemsize == 0
-        n = src_buf.num_chunks()
-        for k in range(n):
-            hi = min(src_buf.size, (k + 1) * src_buf.chunk_size)
-            with self.cv:
-                while src_buf.bytes_present < hi:
-                    if src in self.dead:
-                        raise DeadNode(str(src))
-                    self.cv.wait(timeout=5.0)
-                a = src_buf.read_chunk(k).view(dtype)
-                b = local_buf.read_chunk(k).view(dtype)
+        pos = 0
+        total = src_buf.size
+        while pos < total:
+            avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+            if src in self.dead:
+                raise DeadNode(str(src))
+            if src_buf.failed:
+                raise StaleBuffer(f"{object_id}@{src}")
+            if avail <= pos:
+                continue
             if self.pace:
+                avail = min(avail, pos + src_buf.chunk_size)
                 time.sleep(self.pace)
+            a = src_buf.view(pos, avail).view(dtype)
+            b = local_buf.view(pos, avail).view(dtype)
             c = op(a, b)
-            with self.cv:
-                out.write_chunk(k * src_buf.chunk_size, c.view(np.uint8))
-                self.bytes_sent_per_node[src] += a.size * itemsize
-                self.cv.notify_all()
+            out.write_chunk(pos, c.view(np.uint8))
+            self._stats.windows += 1
+            with self._stats_lock:
+                self.bytes_sent_per_node[src] += avail - pos
+            pos = avail
+        with self._stats_lock:
+            self.transfers.append((src, dst, object_id))
 
     def _fetch_from(self, node, object_id, src_node, deadline) -> ChunkedBuffer:
         """Stream a specific remote object into ``node`` (final chain hop)."""
-        with self.cv:
-            while True:
-                if src_node in self.dead:
-                    # The chain tail died with its node: fail fast so the
-                    # caller's recovery path runs instead of riding the
-                    # deadline (the request-tail stall).
-                    raise DeadNode(str(src_node))
-                src_buf = self.stores[src_node].get(object_id)
-                if src_buf is not None:
-                    break
-                if not self.cv.wait(timeout=max(0.0, deadline - time.time())):
-                    raise TimeoutError(f"fetch {object_id}")
+
+        def attempt():
+            if node in self.dead:
+                raise DeadNode(str(node))
+            if src_node in self.dead:
+                # The chain tail died with its node: fail fast so the
+                # caller's recovery path runs instead of riding the
+                # deadline (the request-tail stall).
+                raise DeadNode(str(src_node))
+            src_buf = self.stores[src_node].get(object_id)
+            if src_buf is None:
+                return None
             dst_buf = self.stores[node].create(
                 object_id, src_buf.size, pinned=False, chunk_size=self.chunk_size
             )
-        self._stream_copy(src_node, node, src_buf, dst_buf)
+            return src_buf, dst_buf
+
+        src_buf, dst_buf = self._await_directory(
+            [object_id], attempt, deadline, what=f"fetch {object_id}"
+        )
+        try:
+            self._stream_copy(src_node, node, src_buf, dst_buf, object_id)
+        except StaleBuffer as e:
+            # The tail's copy was abandoned/restarted away: to the caller
+            # that is loss of the chain partial, a recoverable condition
+            # (lineage / k-of-n quorum), not an internal transport state.
+            raise ObjectLost(object_id) from e
+        finally:
+            if not dst_buf.complete:
+                # Never-published staging copy of a failed final hop: drop
+                # it unless a concurrent *published* fetch shares it.
+                with self._dir_lock:
+                    published_here = any(
+                        l.node == node
+                        for l in self.directory.locations(object_id)
+                    )
+                    if not published_here:
+                        self.stores[node].delete(object_id)
         return dst_buf
 
     # -- Delete / failures --------------------------------------------------------
 
     def delete(self, object_id: str):
-        with self.cv:
-            nodes = self.directory.delete(object_id)
+        with self._dir_lock:
+            nodes = self.directory.delete(object_id)  # notifies subscribers
             for nid in nodes:
                 if nid < len(self.stores):
                     self.stores[nid].delete(object_id)
             self.meta.pop(object_id, None)
-            self.cv.notify_all()
 
     def fail_node(self, node: int) -> List[str]:
         """Kill a node: all its copies vanish; returns orphaned object ids
         (no surviving copy anywhere -- framework must recover, section 7)."""
-        with self.cv:
+        with self._dir_lock:
             self.dead.add(node)
-            self.stores[node] = NodeStore(node)
-            orphaned = self.directory.fail_node(node)
-            self.cv.notify_all()
+            old_store = self.stores[node]
+            self.stores[node] = NodeStore(node, self.store_capacity, stats=self._stats)
+            orphaned = self.directory.fail_node(node)  # notifies subscribers
+            self._wake_membership_waiters()
+        # Wake readers gated on the dead node's watermarks (outside the
+        # directory lock; buffer locks are innermost).
+        old_store.fail_all_buffers()
         return orphaned
 
     def restart_node(self, node: int):
-        with self.cv:
+        with self._dir_lock:
             self.dead.discard(node)
-            self.stores[node] = NodeStore(node)
-            self.cv.notify_all()
+            old_store = self.stores[node]
+            self.stores[node] = NodeStore(node, self.store_capacity, stats=self._stats)
+            self._wake_membership_waiters()
+        # Any transfer still reading the pre-restart store's buffers must
+        # fail over (those copies are gone from the directory).
+        old_store.fail_all_buffers()
 
     def fail_directory_primary(self):
         """Kill the primary directory; promote replica (paper section 7)."""
-        with self.cv:
+        with self._dir_lock:
             self.directory.fail_primary()
-            self.cv.notify_all()
+            self._wake_membership_waiters()

@@ -9,16 +9,60 @@ unpinned and evictable under a local LRU policy.
 The store tracks per-object progress (bytes received) so a partial copy
 can serve as an upstream sender without ever forwarding bytes it does not
 yet hold (pipelining, section 4.2).
+
+Concurrency model (see README "Data-plane concurrency model"): every
+``ChunkedBuffer`` owns its *own* lock and condition variable -- the
+per-buffer progress watermark.  Writers advance ``bytes_present`` and
+signal only that buffer's waiters; readers block in ``wait_for_bytes``.
+Disjoint transfers therefore never share a lock on the chunk hot path.
+``NodeStore`` itself is a control-plane structure: it is only ever
+mutated under the cluster's directory lock, and holds no lock of its own.
+A buffer lock is never held across a directory or store call (lock
+ordering: directory lock > buffer lock, buffer lock innermost).
 """
 
 from __future__ import annotations
 
 import collections
+import threading
 from typing import Dict, Optional
 
 import numpy as np
 
 from repro.core.api import DEFAULT_CHUNK_SIZE, ObjectAlreadyExists
+
+
+class DataPlaneStats:
+    """Contention counters for the threaded data plane.
+
+    Incremented without a dedicated lock (each increment happens under
+    *some* buffer/directory lock, but different buffers race): the counts
+    are monitoring-grade approximations, good to well under 1% -- they
+    feed ``BENCH_core.json``, not correctness decisions.
+
+      * ``wakeups``          -- returns from a blocked data-plane wait
+      * ``notifies``         -- watermark signals that had >= 1 waiter
+      * ``notified_waiters`` -- waiters woken per signal, summed
+      * ``dir_wakeups``      -- control-plane (directory event) wakeups
+      * ``windows``          -- drained transfer windows (lock acquisitions
+        per streamed buffer; chunks/window >> 1 means the drain is working)
+    """
+
+    __slots__ = ("wakeups", "notifies", "notified_waiters", "dir_wakeups", "windows")
+
+    def __init__(self):
+        self.wakeups = 0
+        self.notifies = 0
+        self.notified_waiters = 0
+        self.dir_wakeups = 0
+        self.windows = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+class BufferFailed(RuntimeError):
+    """The node holding this buffer died while a reader was gated on it."""
 
 
 class ChunkedBuffer:
@@ -27,13 +71,28 @@ class ChunkedBuffer:
     Backed by a numpy uint8 array.  ``bytes_present`` advances monotonically
     (chunks arrive in order within one transfer, which is how TCP -- and our
     chunk pipeline -- deliver them).
+
+    The buffer is its own synchronization domain: ``write_chunk`` advances
+    the watermark under the buffer's private condition and wakes only this
+    buffer's waiters; ``wait_for_bytes`` blocks readers on the watermark.
+    Bytes below the watermark are immutable, so readers may take zero-copy
+    views of ``data[:bytes_present]`` without holding the lock.
     """
 
-    def __init__(self, size: int, chunk_size: int = DEFAULT_CHUNK_SIZE):
+    def __init__(
+        self,
+        size: int,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        stats: Optional[DataPlaneStats] = None,
+    ):
         self.size = size
         self.chunk_size = chunk_size
         self.data = np.zeros(size, dtype=np.uint8)
         self.bytes_present = 0
+        self.failed = False
+        self.stats = stats
+        self._cond = threading.Condition(threading.Lock())
+        self._waiters = 0
 
     @classmethod
     def from_bytes(cls, payload: bytes, chunk_size: int = DEFAULT_CHUNK_SIZE) -> "ChunkedBuffer":
@@ -43,9 +102,14 @@ class ChunkedBuffer:
         return buf
 
     @classmethod
-    def from_array(cls, arr: np.ndarray, chunk_size: int = DEFAULT_CHUNK_SIZE) -> "ChunkedBuffer":
+    def from_array(
+        cls,
+        arr: np.ndarray,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        stats: Optional[DataPlaneStats] = None,
+    ) -> "ChunkedBuffer":
         raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-        buf = cls(raw.size, chunk_size)
+        buf = cls(raw.size, chunk_size, stats=stats)
         buf.data[:] = raw
         buf.bytes_present = raw.size
         return buf
@@ -57,10 +121,53 @@ class ChunkedBuffer:
     def num_chunks(self) -> int:
         return max(1, -(-self.size // self.chunk_size))
 
+    # -- watermark protocol --------------------------------------------------
+
     def write_chunk(self, offset: int, payload: np.ndarray) -> None:
+        """Write bytes at ``offset`` and advance the watermark, signalling
+        only THIS buffer's waiters (never a cluster-global wakeup)."""
         end = offset + payload.size
-        self.data[offset:end] = payload
-        self.bytes_present = max(self.bytes_present, end)
+        with self._cond:
+            self.data[offset:end] = payload
+            self.bytes_present = max(self.bytes_present, end)
+            if self._waiters:
+                if self.stats is not None:
+                    self.stats.notifies += 1
+                    self.stats.notified_waiters += self._waiters
+                self._cond.notify_all()
+
+    def wait_for_bytes(self, hi: int, timeout: Optional[float] = None) -> int:
+        """Block until ``bytes_present >= hi`` (or the buffer fails, or
+        ``timeout`` elapses).  Returns the watermark snapshot; the caller
+        may read ``data[:snapshot]`` zero-copy afterwards -- that region
+        is immutable."""
+        with self._cond:
+            while self.bytes_present < hi and not self.failed:
+                self._waiters += 1
+                try:
+                    signaled = self._cond.wait(timeout)
+                finally:
+                    self._waiters -= 1
+                if self.stats is not None:
+                    self.stats.wakeups += 1
+                if not signaled:
+                    break
+            return self.bytes_present
+
+    def fail(self) -> None:
+        """Node death: wake every reader gated on this buffer so it can
+        fail over to another source instead of riding a timeout."""
+        with self._cond:
+            self.failed = True
+            if self._waiters:
+                self._cond.notify_all()
+
+    # -- reads ---------------------------------------------------------------
+
+    def view(self, lo: int, hi: int) -> np.ndarray:
+        """Zero-copy view of ``data[lo:hi]``.  Only valid below a watermark
+        snapshot the caller obtained from ``wait_for_bytes``."""
+        return self.data[lo:hi]
 
     def read_chunk(self, index: int) -> np.ndarray:
         lo = index * self.chunk_size
@@ -83,19 +190,36 @@ class ChunkedBuffer:
 
 
 class NodeStore:
-    """Object store for a single node."""
+    """Object store for a single node.
 
-    def __init__(self, node_id: int, capacity_bytes: Optional[int] = None):
+    Not internally locked: all map mutations happen under the owning
+    cluster's directory lock (control plane).  Byte traffic goes through
+    the per-buffer watermarks above (data plane)."""
+
+    def __init__(
+        self,
+        node_id: int,
+        capacity_bytes: Optional[int] = None,
+        stats: Optional[DataPlaneStats] = None,
+    ):
         self.node_id = node_id
         self.capacity_bytes = capacity_bytes
+        self.stats = stats
         self.objects: Dict[str, ChunkedBuffer] = {}
         self.pinned: set = set()
         self._lru = collections.OrderedDict()  # unpinned object id -> size
+        self._used_bytes = 0  # O(1) maintained; see used_bytes
 
     # -- accounting ---------------------------------------------------------
 
     @property
     def used_bytes(self) -> int:
+        """O(1) maintained byte count (invariant: equals
+        ``recompute_used_bytes()``; asserted in tests/test_store_eviction)."""
+        return self._used_bytes
+
+    def recompute_used_bytes(self) -> int:
+        """O(n) ground truth for the ``used_bytes`` counter invariant."""
         return sum(b.size for b in self.objects.values())
 
     def _touch(self, object_id: str) -> None:
@@ -114,7 +238,7 @@ class NodeStore:
         if self.capacity_bytes is None:
             return
         skipped = []
-        while self.used_bytes + incoming > self.capacity_bytes and self._lru:
+        while self._used_bytes + incoming > self.capacity_bytes and self._lru:
             victim, vsize = self._lru.popitem(last=False)
             buf = self.objects.get(victim)
             if buf is None:
@@ -123,6 +247,7 @@ class NodeStore:
                 skipped.append((victim, vsize))
                 continue
             self.objects.pop(victim, None)
+            self._used_bytes -= buf.size
         # Re-install skipped in-flight entries at the cold end, original order.
         for victim, vsize in reversed(skipped):
             self._lru[victim] = vsize
@@ -141,8 +266,9 @@ class NodeStore:
                 self._lru.pop(object_id, None)
             return existing
         self._maybe_evict(size)
-        buf = ChunkedBuffer(size, chunk_size)
+        buf = ChunkedBuffer(size, chunk_size, stats=self.stats)
         self.objects[object_id] = buf
+        self._used_bytes += size
         if pinned:
             self.pinned.add(object_id)
         else:
@@ -150,17 +276,24 @@ class NodeStore:
         return buf
 
     def put_array(self, object_id: str, arr: np.ndarray, chunk_size: int = DEFAULT_CHUNK_SIZE) -> ChunkedBuffer:
-        buf = ChunkedBuffer.from_array(arr, chunk_size)
+        buf = ChunkedBuffer.from_array(arr, chunk_size, stats=self.stats)
         existing = self.objects.get(object_id)
         if existing is not None:
             if existing.complete and not np.array_equal(existing.data, buf.data):
                 raise ObjectAlreadyExists(object_id)
+            if not existing.complete:
+                # Replacing an in-flight partial (re-Put / lineage revive):
+                # readers gated on the orphaned buffer's watermark must
+                # fail over to the new complete copy, not ride a timeout.
+                existing.fail()
             # Replacing our own copy: only the size delta is incoming;
             # counting the full size would double-count the object and
             # evict innocent bystanders.
             self._maybe_evict(buf.size - existing.size)
+            self._used_bytes += buf.size - existing.size
         else:
             self._maybe_evict(buf.size)
+            self._used_bytes += buf.size
         self.objects[object_id] = buf
         self.pinned.add(object_id)
         self._lru.pop(object_id, None)
@@ -178,6 +311,20 @@ class NodeStore:
         return object_id in self.objects
 
     def delete(self, object_id: str) -> None:
-        self.objects.pop(object_id, None)
+        buf = self.objects.pop(object_id, None)
+        if buf is not None:
+            self._used_bytes -= buf.size
+            if not buf.complete:
+                # An in-flight copy deleted out from under its readers:
+                # wake them now (they fail over or observe ObjectLost)
+                # instead of letting them sleep on a watermark that may
+                # never advance again.
+                buf.fail()
         self.pinned.discard(object_id)
         self._lru.pop(object_id, None)
+
+    def fail_all_buffers(self) -> None:
+        """Node death: wake every reader blocked on any of this store's
+        watermarks (targeted replacement for the old global notify_all)."""
+        for buf in list(self.objects.values()):
+            buf.fail()

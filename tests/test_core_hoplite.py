@@ -189,6 +189,21 @@ def test_local_broadcast_relay_and_bytes():
     assert max(c.bytes_sent_per_node) <= 2 * x.nbytes
 
 
+def test_local_transfers_record_object_ids():
+    """Every data-plane stream is recorded as (src, dst, object_id) --
+    regression: the object id column used to be the constant ""."""
+    c = LocalCluster(4, chunk_size=8192)
+    x = np.random.RandomState(3).rand(100_000).astype(np.float32)
+    c.put(0, "xfer-oid", x)
+    for i in range(1, 4):
+        np.testing.assert_array_equal(c.get(i, "xfer-oid"), x)
+    assert len(c.transfers) >= 3  # one entry per stream, not per chunk
+    for src, dst, oid in c.transfers:
+        assert oid == "xfer-oid"
+        assert src != dst
+        assert 0 <= src < 4 and 0 <= dst < 4
+
+
 def test_local_reduce_exact():
     c = LocalCluster(8)
     vals = [np.random.RandomState(i).rand(10_000) for i in range(8)]
@@ -241,6 +256,71 @@ def test_local_reduce_inline_only_sources_after_node_loss():
     c.reduce(0, "tot", [f"s{i}" for i in range(5)], timeout=10.0)
     assert time.time() - t0 < 5.0, "reduce stalled hunting a coordinator"
     np.testing.assert_allclose(c.get(0, "tot"), sum(small))
+
+
+def test_subscriptions_survive_directory_failover():
+    """A waiter blocked on a not-yet-published object must still be woken
+    by a publication that happens AFTER fail_directory_primary (regression:
+    promotion replaced the shards, dropping all subscriber lists)."""
+    import threading
+
+    c = LocalCluster(2, directory_replicas=1)
+    a = np.random.RandomState(5).rand(30_000)
+    b = np.random.RandomState(6).rand(30_000)
+    c.put(0, "early", a)
+    result = {}
+
+    def blocked_reduce():
+        try:
+            # "late" does not exist yet: the chain subscribes and waits.
+            c.reduce(1, "out", ["early", "late"], timeout=15.0)
+            result["val"] = c.get(1, "out", timeout=15.0)
+        except BaseException as e:  # noqa: BLE001
+            result["err"] = e
+
+    t = threading.Thread(target=blocked_reduce, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let the chain register its subscriptions
+    c.fail_directory_primary()
+    t0 = time.time()
+    c.put(0, "late", b)
+    t.join(timeout=10.0)
+    assert not t.is_alive(), "chain never woke after failover"
+    assert "err" not in result, result.get("err")
+    np.testing.assert_allclose(result["val"], a + b, rtol=1e-12)
+    assert time.time() - t0 < 5.0, "woke only via timeout, not the event"
+
+
+def test_failed_reduce_reclaims_pinned_intermediates():
+    """A reduce aborted by a source-node failure must not leak its pinned
+    chain hop outputs (regression: reclamation ran only on success, so
+    every serving retry leaked one pinned set per failure)."""
+    c = LocalCluster(8, chunk_size=8192, pace=0.0005)
+    vals = [np.random.RandomState(i).rand(50_000) for i in range(1, 8)]
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"fr{i}", v)
+
+    def kill_soon():
+        time.sleep(0.02)
+        c.fail_node(3)
+
+    import threading
+
+    killer = threading.Thread(target=kill_soon, daemon=True)
+    killer.start()
+    try:
+        c.reduce(0, "frsum", [f"fr{i}" for i in range(7)], timeout=20.0)
+    except Exception:
+        pass  # failure is an acceptable outcome; leaking is not
+    killer.join()
+    c.join(timeout=20.0)  # let hop threads drain
+    leaked = [
+        oid
+        for store in c.stores
+        for oid in store.objects
+        if "-hop" in oid and oid in store.pinned
+    ]
+    assert not leaked, f"pinned hop intermediates leaked: {leaked}"
 
 
 def test_final_hop_fetch_from_dead_node_fails_fast():

@@ -83,6 +83,40 @@ def test_create_existing_upgrades_pin():
     assert s.contains("x")
 
 
+def test_used_bytes_counter_invariant():
+    """``used_bytes`` is an O(1) maintained counter; it must equal the
+    O(n) ground truth after every mutation class: create, put_array,
+    re-put, delete, LRU eviction (including skipped in-flight victims),
+    and stale-LRU-entry handling."""
+    s = NodeStore(0, capacity_bytes=200)
+
+    def check():
+        assert s.used_bytes == s.recompute_used_bytes()
+
+    check()  # empty
+    s.put_array("a", np.zeros(60, np.uint8))
+    check()
+    s.put_array("a", np.zeros(60, np.uint8))  # identical re-put: no change
+    check()
+    _complete_unpinned(s, "b", 50)
+    check()
+    inflight = s.create("in", 40, pinned=False, chunk_size=16)
+    assert not inflight.complete
+    check()
+    # Pressure: evicts "b" (complete, unpinned), skips "in" (in-flight).
+    _complete_unpinned(s, "c", 60)
+    assert not s.contains("b") and s.contains("in")
+    check()
+    s.delete("c")
+    check()
+    s.delete("c")  # double delete: no change
+    check()
+    s.delete("in")
+    s.delete("a")
+    check()
+    assert s.used_bytes == 0
+
+
 def test_stale_location_after_capacity_eviction_recovers():
     """A COMPLETE unpinned copy evicted under capacity pressure leaves a
     stale directory location; Get must invalidate it and retry another
