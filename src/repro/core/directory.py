@@ -1,18 +1,24 @@
 """Object directory service (paper section 4.1).
 
 A sharded hash table mapping ObjectID -> {size, locations}.  Each location
-carries a single progress bit (PARTIAL / COMPLETE).  The directory:
+carries a progress bit (PARTIAL / COMPLETE) plus a byte watermark.  The
+directory:
 
   * answers synchronous and asynchronous ("publish future locations to the
-    client") location queries,
-  * returns exactly ONE location per query, preferring COMPLETE copies,
-  * supports *checkout* semantics: the receiver may ask for the returned
-    location to be removed while the transfer is in flight, and adds it
-    back afterwards -- this caps every node at one outbound transfer and is
-    what makes the receiver-driven broadcast tree emerge (section 4.3),
+    client") location queries; subscriptions fire on partial-copy
+    registration and on watermark advances, not just on COMPLETE,
+  * selects senders adaptively: ``select_source`` returns the least-loaded
+    copy whose watermark leads the receiver's progress and charges the
+    holder's outbound-load counter until ``release_source`` -- this caps
+    every node at the broadcast policy's out-degree and is what makes the
+    receiver-driven multicast tree emerge on the fly (section 4.3);
+    ``checkout_location`` remains as the original one-outbound-transfer
+    special case (still used by some tests/baselines),
   * inlines small objects (< 64 KB) directly (section 4.1),
   * can be replicated for fault tolerance (section 7); replicas apply the
     same update stream and a failover promotes a replica to primary.
+    Outbound-load counters are *client* state (like subscriptions): they
+    live on the serving primary and survive promotion untouched.
 
 This is a *control plane* component: it is used verbatim by both the
 discrete-event simulator and the threaded in-process cluster.
@@ -29,6 +35,7 @@ from repro.core.api import (
     Progress,
     SMALL_OBJECT_THRESHOLD,
 )
+from repro.core import scheduler as _scheduler
 
 # Per-shard tombstone bound (see _Shard.deleted).
 _TOMBSTONES_PER_SHARD = 4096
@@ -44,6 +51,11 @@ class _Shard:
         self.subscribers: Dict[str, List[Callable]] = collections.defaultdict(list)
         # Locations temporarily checked out by an in-flight transfer.
         self.checked_out: Dict[str, Dict[int, Location]] = collections.defaultdict(dict)
+        # Per-object send tallies: object id -> {node -> times selected as
+        # source}.  Selection tie-break so repeat requests spread across
+        # every holder instead of recycling the origin once its slots free
+        # up; dropped with the entry on delete.
+        self.sends: Dict[str, Dict[int, int]] = collections.defaultdict(dict)
         # Tombstones: deleted object ids.  A transfer that was in flight
         # when Delete arrived must not silently re-add the object when it
         # checks its location back in / publishes completion.  Bounded
@@ -60,6 +72,20 @@ class ObjectDirectory:
         self.num_shards = num_shards
         self.shards = [_Shard() for _ in range(num_shards)]
         self._tick = 0  # deterministic tie-break counter
+        # Per-node outbound-load counters (concurrent sends charged by
+        # select_source, released by release_source).  Client-side state
+        # like subscriptions: not replicated, survives primary failover.
+        self._outbound: Dict[int, int] = collections.defaultdict(int)
+        # Charge epochs: bumped when a node's outbound state is reset
+        # (fail/restart).  A release tagged with a stale epoch must NOT
+        # decrement charges that belong to the node's post-restart
+        # streams, or the out-degree cap invariant silently breaks.
+        self._node_epoch: Dict[int, int] = collections.defaultdict(int)
+        # node -> object ids whose receivers found a feasible source on
+        # that node but were turned away by the out-degree cap; notified
+        # (and cleared) when the node frees a slot.  Targeted registry so
+        # release_source never has to scan the subscriber tables.
+        self._cap_blocked: Dict[int, set] = {}
 
     # -- internal ----------------------------------------------------------
 
@@ -102,10 +128,21 @@ class ObjectDirectory:
         self._notify(shard, object_id)
 
     def update_progress(self, object_id: str, node: int, bytes_present: int) -> None:
+        """Advance a partial copy's watermark.  Subscribers are woken on
+        the 0 -> positive transition only -- the moment this copy becomes
+        a *feasible* source for fresh receivers.  Waking them on every
+        subsequent window would stampede all blocked receivers through
+        the planner once per window (O(windows x receivers) wakeups);
+        later re-plans observe current watermarks directly at query time,
+        and completion/release events cover the remaining wake-ups."""
         shard = self._shard(object_id)
-        loc = shard.locations[object_id].get(node)
-        if loc is not None:
+        locs = shard.locations.get(object_id)
+        loc = locs.get(node) if locs else None
+        if loc is not None and bytes_present > loc.bytes_present:
+            became_feasible = loc.bytes_present == 0
             loc.bytes_present = bytes_present
+            if became_feasible:
+                self._notify(shard, object_id)
 
     # -- queries -----------------------------------------------------------
 
@@ -119,6 +156,94 @@ class ObjectDirectory:
         shard = self._shard(object_id)
         entry = shard.locations.get(object_id)
         return list(entry.values()) if entry else []
+
+    # -- adaptive source selection (receiver-driven broadcast trees) -------
+
+    def select_source(
+        self,
+        object_id: str,
+        *,
+        exclude: Optional[int] = None,
+        min_lead: int = 0,
+        max_out_degree: Optional[int] = None,
+        dead=frozenset(),
+    ) -> Optional[Location]:
+        """Least-loaded copy whose watermark leads ``min_lead`` (section
+        4.2: a receiver may fetch from ANY node holding the object,
+        including one whose copy is still in flight).
+
+        Unlike :meth:`checkout_location` the location stays visible; the
+        holder's outbound-load counter is charged instead, capping each
+        node at ``max_out_degree`` *concurrent* sends.  The caller MUST
+        pair every non-None return with :meth:`release_source`.
+        """
+        shard = self._shard(object_id)
+        locs = shard.locations.get(object_id)
+        if not locs:
+            return None
+        candidates = [
+            l
+            for l in locs.values()
+            if l.node != exclude and l.node not in dead
+        ]
+        self._tick += 1
+        served = shard.sends.get(object_id, {})
+        chosen = _scheduler.select_source(
+            candidates,
+            loads=self._outbound,
+            served=served,
+            min_lead=min_lead,
+            max_out_degree=max_out_degree,
+            tick=self._tick,
+        )
+        if chosen is not None:
+            self._outbound[chosen.node] += 1
+            shard.sends[object_id][chosen.node] = served.get(chosen.node, 0) + 1
+        elif max_out_degree is not None:
+            # Turned away by the cap, not by feasibility: register
+            # interest on every feasible holder so the next freed slot on
+            # any of them wakes this object's waiters (targeted -- no
+            # subscriber-table scans at release time).
+            for l in candidates:
+                if l.progress is Progress.COMPLETE or l.bytes_present > min_lead:
+                    self._cap_blocked.setdefault(l.node, set()).add(object_id)
+        return chosen
+
+    def release_source(self, object_id: str, node: int, epoch: Optional[int] = None) -> None:
+        """Transfer off ``node`` finished (or failed): free its outbound
+        slot and wake blocked receivers so they re-plan promptly.
+
+        ``epoch`` is the value of :meth:`charge_epoch` captured when the
+        slot was charged; a release from a stream that predates the
+        node's last fail/restart must not decrement charges belonging to
+        its post-restart streams (the out-degree cap invariant).
+
+        The outbound cap is per NODE, shared across objects -- a freed
+        slot can unblock a receiver of any *other* object this node also
+        holds; those waiters registered themselves in ``_cap_blocked``
+        at selection time and are notified here, once per transfer."""
+        if epoch is None or epoch == self._node_epoch.get(node, 0):
+            if self._outbound.get(node, 0) > 0:
+                self._outbound[node] -= 1
+        self._notify(self._shard(object_id), object_id)
+        for oid in self._cap_blocked.pop(node, ()):
+            if oid != object_id:
+                self._notify(self._shard(oid), oid)
+
+    def charge_epoch(self, node: int) -> int:
+        """Capture alongside a select_source charge; pass to release_source."""
+        return self._node_epoch.get(node, 0)
+
+    def reset_outbound(self, node: int) -> None:
+        """Node failed or restarted: its in-flight sends are gone.  Zero
+        the load counter and bump the epoch so late releases from the
+        pre-reset streams become no-ops."""
+        self._node_epoch[node] = self._node_epoch.get(node, 0) + 1
+        self._outbound.pop(node, None)
+        self._cap_blocked.pop(node, None)
+
+    def outbound_load(self, node: int) -> int:
+        return self._outbound.get(node, 0)
 
     def checkout_location(
         self, object_id: str, *, remove: bool = True, exclude: Optional[int] = None
@@ -204,6 +329,7 @@ class ObjectDirectory:
         shard.checked_out.pop(object_id, None)
         shard.inline.pop(object_id, None)
         shard.size.pop(object_id, None)
+        shard.sends.pop(object_id, None)
         # Subscribers are NOT popped: a still-registered waiter (e.g. a
         # reduce source that may be revived by a re-Put) must keep
         # receiving events; each waiter unsubscribes itself when done.
@@ -264,6 +390,10 @@ class ObjectDirectory:
         ObjectLost immediately when the last copy vanished)."""
         orphaned = []
         affected = []
+        # In-flight sends died with the node: zero its load counter and
+        # bump its charge epoch so late releases from its old streams
+        # cannot free slots charged by post-restart streams.
+        self.reset_outbound(node)
         for shard in self.shards:
             for object_id in list(shard.locations.keys()):
                 dropped = shard.locations[object_id].pop(node, None) is not None

@@ -12,6 +12,15 @@ Transfers stream chunk-by-chunk gated on the *source's* progress, so a
 partial copy genuinely forwards data it has only partially received --
 the real pipelining mechanism, not a mock of it.
 
+Broadcast is receiver-driven and adaptive (README "Receiver-driven
+broadcast"): each ``_fetch`` asks the directory for the least-loaded copy
+whose watermark leads its own progress, registers its in-flight partial
+as a candidate source immediately, and publishes its watermark per
+window -- so N receivers self-organize into a pipelined multicast tree
+whose fan-out is capped by the shared broadcast policy
+(``planner.broadcast_policy``), and a source failure or stall mid-stream
+re-plans to another copy and resumes from the current watermark.
+
 Concurrency model (README "Data-plane concurrency model"):
 
   * Data plane: every ``ChunkedBuffer`` owns its progress watermark (its
@@ -20,12 +29,15 @@ Concurrency model (README "Data-plane concurrency model"):
   * Control plane: one directory lock (``_dir_lock``) guards the
     directory, object metadata, the per-node store maps and cluster
     membership.  Threads that must wait for *directory state* (a location
-    to appear, a source to complete) subscribe to per-object-id events --
-    ``ObjectDirectory.subscribe`` callbacks fired by ``publish_*`` /
-    ``delete`` / ``fail_node`` -- instead of polling a global condition.
+    to appear, a watermark to advance past theirs, an outbound slot to
+    free up) subscribe to per-object-id events -- ``ObjectDirectory``
+    callbacks fired by ``publish_*`` / ``update_progress`` /
+    ``release_source`` / ``delete`` / ``fail_node`` -- instead of polling
+    a global condition.
   * Lock ordering: the directory lock is never acquired while holding a
     buffer lock; buffer locks are innermost and never held across a
-    directory or store call.
+    directory or store call.  Streams take the directory lock only
+    *between* windows (watermark publication), never per chunk.
 """
 
 from __future__ import annotations
@@ -47,7 +59,7 @@ from repro.core.api import (
     SUM,
 )
 from repro.core.directory import ObjectDirectory, ReplicatedDirectory
-from repro.core.planner import LinkSpec, EC2_LINK, use_two_dimensional
+from repro.core.planner import LinkSpec, EC2_LINK, broadcast_policy, use_two_dimensional
 from repro.core.scheduler import ChainState, partition_groups
 from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore
 
@@ -67,10 +79,22 @@ class StaleBuffer(RuntimeError):
     and retry another source -- do NOT declare the whole node dead."""
 
 
+class SourceStalled(RuntimeError):
+    """The source's watermark stopped advancing (its own upstream died or
+    wedged) while another copy exists: release the slot and re-plan to a
+    different source, resuming from the receiver's current watermark."""
+
+
 # Sentinel timeout for watermark waits: bounds how long a reader sleeps
 # before re-checking cluster membership (it is normally woken long before
 # this by the buffer's own condition or its ``fail()``).
 _WATERMARK_RECHECK_S = 5.0
+
+# A relay stream publishes its destination watermark at least this many
+# times per object, so downstream receivers chasing it overlap with the
+# inbound leg instead of seeing one 0 -> complete jump (store-and-forward).
+# Per-hop lag is ~1/PIPELINE_MIN_WINDOWS of the object's transfer time.
+PIPELINE_MIN_WINDOWS = 16
 
 
 class LocalCluster:
@@ -80,17 +104,32 @@ class LocalCluster:
         self,
         num_nodes: int,
         *,
-        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        chunk_size: Optional[int] = None,
         link: LinkSpec = EC2_LINK,
         directory_replicas: int = 1,
         pace: float = 0.0,  # optional seconds of sleep per chunk (tests)
         store_capacity: Optional[int] = None,
+        max_out_degree: Optional[int] = None,  # None -> broadcast policy
+        stall_timeout: float = 2 * _WATERMARK_RECHECK_S,
     ):
         self.num_nodes = num_nodes
-        self.chunk_size = chunk_size
+        # ``chunk_size=None`` autotunes per object via the Appendix-A cost
+        # model (CollectiveConfig.chunks_for); an explicit value pins it.
+        self._explicit_chunk_size = chunk_size
+        self.chunk_size = chunk_size if chunk_size is not None else DEFAULT_CHUNK_SIZE
+        self._autotune = None
+        if chunk_size is None:
+            try:  # collectives pulls in jax; core must work without it
+                from repro.core.collectives import CollectiveConfig
+
+                self._autotune = CollectiveConfig(link=link)
+            except Exception:  # noqa: BLE001 -- fall back to DEFAULT_CHUNK_SIZE
+                self._autotune = None
         self.link = link
         self.pace = pace
         self.store_capacity = store_capacity
+        self.max_out_degree = max_out_degree
+        self.stall_timeout = stall_timeout
         self.directory = ReplicatedDirectory(num_replicas=directory_replicas)
         self._stats = DataPlaneStats()
         self.stores = [
@@ -105,6 +144,10 @@ class LocalCluster:
         # Events of threads blocked on directory state; set on membership
         # changes (fail/restart/failover) so waiters re-check promptly.
         self._membership_waiters: set = set()
+        # (node, object_id) fetches currently streaming: a sibling get of
+        # the same object on the same node waits for the in-flight one
+        # instead of opening a duplicate inbound stream.
+        self._fetching: set = set()
         self._threads: List[threading.Thread] = []
         # instrumentation
         self._stats_lock = threading.Lock()
@@ -114,9 +157,39 @@ class LocalCluster:
     # -- helpers -------------------------------------------------------------
 
     @property
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, object]:
         """Data-plane contention counters (see store.DataPlaneStats)."""
         return self._stats.as_dict()
+
+    def chunk_size_for(self, nbytes: int) -> int:
+        """Chunk size for one object: the explicit override when given,
+        else the Appendix-A autotuned count (more chunks for bigger
+        objects / longer chains), rounded up to a 64-byte multiple so
+        typed reduce windows stay element-aligned."""
+        if self._explicit_chunk_size is not None or self._autotune is None:
+            return self.chunk_size
+        if nbytes <= 0:
+            return self.chunk_size
+        c = self._autotune.chunks_for(self.num_nodes, nbytes)
+        chunk = -(-nbytes // c)
+        return max(64, chunk + (-chunk) % 64)
+
+    def broadcast_out_degree(self, nbytes: int) -> int:
+        """Per-node concurrent-outbound cap for an object of this size --
+        the explicit override, or the shared simulator/LocalCluster
+        broadcast-tree policy (t_pipelined_multicast vs
+        t_binomial_store_forward)."""
+        if self.max_out_degree is not None:
+            return self.max_out_degree
+        policy = broadcast_policy(
+            max(1, self.num_nodes - 1),
+            self.link,
+            nbytes,
+            chunk=float(self.chunk_size_for(nbytes)),
+            # Threaded streams pace independently (no shared egress pipe).
+            egress_sharing=False,
+        )
+        return policy.max_out_degree
 
     def _spawn(self, fn, *args) -> threading.Thread:
         t = threading.Thread(target=fn, args=args, daemon=True)
@@ -208,7 +281,9 @@ class LocalCluster:
             self._check_alive(node)
             self.directory.revive(object_id)  # explicit re-Put clears tombstone
             self.meta[object_id] = (value.dtype, value.shape)
-            buf = self.stores[node].put_array(object_id, value, self.chunk_size)
+            buf = self.stores[node].put_array(
+                object_id, value, self.chunk_size_for(value.nbytes)
+            )
             if buf.size < SMALL_OBJECT_THRESHOLD:
                 self.directory.publish_inline(object_id, value.copy(), buf.size)
             self.directory.publish_complete(object_id, node, buf.size)
@@ -237,12 +312,25 @@ class LocalCluster:
             return buf.to_array(dtype, shape).copy()
 
     def _fetch(self, node: int, object_id: str, deadline: float) -> ChunkedBuffer:
-        """Pull object into ``node``'s store, retrying on sender failure."""
+        """Pull object into ``node``'s store: adaptive receiver-driven
+        broadcast (paper section 4.2-4.3).
+
+        Each planning round selects the *least-loaded* copy whose
+        watermark leads our own progress -- complete or still in flight --
+        charging the holder's outbound-load counter so no node exceeds
+        the broadcast policy's out-degree; our own partial is registered
+        as a candidate source before the first byte lands, which is what
+        grows the pipelined multicast tree.  On sender failure, stale
+        buffer, or stall we re-plan to another copy and RESUME from the
+        destination watermark instead of restarting."""
+        key = (node, object_id)
+        owns_stream = [False]
 
         def attempt():
-            """Check out a usable sender; None -> wait for a publication.
-            Returns ("done", buf) when a sibling fetch already completed
-            our local copy, else ("xfer", loc, size, src_buf, dst_buf)."""
+            """Plan one transfer leg; None -> wait for a directory event
+            (publication, watermark advance past ours, or a freed
+            outbound slot).  Returns ("done", buf) when a sibling fetch
+            completed our copy, else ("xfer", loc, size, src_buf, dst_buf)."""
             if node in self.dead:
                 # The receiver itself was killed mid-protocol: abort
                 # instead of re-advertising a partial at a dead node.
@@ -251,86 +339,191 @@ class LocalCluster:
                 mine = self.stores[node].get(object_id)
                 if mine is not None and mine.complete:
                     return ("done", mine)  # completed concurrently here
-                loc = self.directory.checkout_location(
-                    object_id, remove=True, exclude=node
+                if not owns_stream[0] and key in self._fetching:
+                    # A sibling fetch is already streaming this object
+                    # into this node: wait for it instead of opening a
+                    # duplicate inbound stream (its completion, failure,
+                    # or abandonment all fire directory events).
+                    return None
+                progress = mine.bytes_present if mine is not None else 0
+                self._refresh_watermarks(object_id)
+                size = self.directory.size_of(object_id)
+                if size is None:
+                    if not self.directory.available_elsewhere(object_id, node):
+                        raise ObjectLost(object_id)
+                    return None  # partial advertised without size yet
+                loc = self.directory.select_source(
+                    object_id,
+                    exclude=node,
+                    min_lead=progress,
+                    max_out_degree=self.broadcast_out_degree(size),
+                    dead=self.dead,
                 )
                 if loc is None:
                     if not self.directory.available_elsewhere(object_id, node):
                         # Only our own (incomplete) partial remains -- no
                         # sender can ever feed it: the object is lost.
                         raise ObjectLost(object_id)
-                    return None
-                if loc.node in self.dead:  # stale location on a dead node
-                    self.directory.return_location(object_id, loc.node)
-                    self.directory.fail_node(loc.node)
-                    continue
+                    # Stuck-cohort detection: in this plane a copy only
+                    # completes by streaming from a complete copy or from
+                    # a partial that leads it (Puts publish COMPLETE
+                    # atomically).  If no complete/inline copy exists and
+                    # we sit at the cohort's watermark frontier, nothing
+                    # can ever feed us: the tail of the object died with
+                    # its last complete holder.  Raise now -- our
+                    # abandoned partial fails chasers over to the next
+                    # frontier, which concludes the same, so the whole
+                    # cohort collapses to ObjectLost (and lineage
+                    # recovery) instead of riding its deadlines.
+                    if self.directory.get_inline(object_id) is None:
+                        locs = self.directory.locations(object_id)
+                        if locs and all(
+                            l.progress is not Progress.COMPLETE for l in locs
+                        ):
+                            frontier = max(l.bytes_present for l in locs)
+                            if progress >= frontier:
+                                raise ObjectLost(object_id)
+                    return None  # all feasible sources busy/behind: wait
                 src_buf = self.stores[loc.node].get(object_id)
-                if src_buf is None:
-                    # Stale location: the copy was LRU-evicted under
-                    # capacity pressure after publication.  Invalidate it
-                    # and retry another source.
+                if src_buf is None or src_buf.failed:
+                    # Stale location: LRU-evicted under capacity pressure
+                    # or abandoned after publication.  Invalidate, retry.
+                    # (Charged and released under one continuous lock
+                    # hold, so the current epoch is the charge's epoch.)
+                    self.directory.release_source(
+                        object_id, loc.node, self.directory.charge_epoch(loc.node)
+                    )
                     self.directory.drop_location(object_id, loc.node)
                     continue
-                size = self.directory.size_of(object_id)
-                dst_buf = self.stores[node].get(object_id)
+                dst_buf = mine
                 if dst_buf is None:
                     dst_buf = self.stores[node].create(
-                        object_id, size, pinned=False, chunk_size=self.chunk_size
+                        object_id,
+                        size,
+                        pinned=False,
+                        chunk_size=self.chunk_size_for(size),
                     )
+                # Register as a candidate source NOW (tree formation),
+                # and claim the (node, object) stream slot.
                 self.directory.publish_partial(object_id, node, size)
-                return ("xfer", loc, size, src_buf, dst_buf)
-
-        while True:
-            try:
-                result = self._await_directory(
-                    [object_id], attempt, deadline, what=f"Get({object_id}) timed out"
+                self._fetching.add(key)
+                owns_stream[0] = True
+                self._stats.note_outbound(
+                    loc.node, self.directory.outbound_load(loc.node)
                 )
-            except (ObjectLost, TimeoutError):
-                # We may have published a partial that no sender will ever
-                # finish feeding: withdraw it and fail its buffer so every
-                # receiver chained off us observes the loss NOW (and can
-                # reconstruct) instead of riding its own deadline.
-                self._abandon_partial(node, object_id)
-                raise
-            if result[0] == "done":
-                return result[1]
-            _, loc, size, src_buf, dst_buf = result
-            try:
-                self._stream_copy(loc.node, node, src_buf, dst_buf, object_id)
-            except DeadNode as e:
-                if e.node_id != loc.node:
-                    # The RECEIVER died, not the sender: failing loc.node
-                    # would wipe a healthy node's directory entries.  Hand
-                    # the sender slot back (or it stays checked out forever
-                    # and starves every other receiver) and abort.
-                    with self._dir_lock:
-                        self.directory.return_location(object_id, loc.node)
+                epoch = self.directory.charge_epoch(loc.node)
+                return ("xfer", loc, size, src_buf, dst_buf, epoch)
+
+        try:
+            while True:
+                try:
+                    result = self._await_directory(
+                        [object_id], attempt, deadline, what=f"Get({object_id}) timed out"
+                    )
+                except (ObjectLost, TimeoutError):
+                    # We may have published a partial that no sender will ever
+                    # finish feeding: withdraw it and fail its buffer so every
+                    # receiver chained off us observes the loss NOW (and can
+                    # reconstruct) instead of riding its own deadline.
+                    self._abandon_partial(node, object_id)
                     raise
+                if result[0] == "done":
+                    return result[1]
+                _, loc, size, src_buf, dst_buf, epoch = result
+                try:
+                    self._stream_copy(
+                        loc.node,
+                        node,
+                        src_buf,
+                        dst_buf,
+                        object_id,
+                        start=dst_buf.bytes_present,
+                        publish_progress=True,
+                    )
+                except DeadNode as e:
+                    with self._dir_lock:
+                        self.directory.release_source(object_id, loc.node, epoch)
+                        if e.node_id != loc.node:
+                            # The RECEIVER died, not the sender: failing
+                            # loc.node would wipe a healthy node's
+                            # directory entries.  Free the sender slot
+                            # (or it stays charged forever) and abort.
+                            raise
+                        self.directory.fail_node(loc.node)
+                        self._withdraw_empty_partial(node, object_id, dst_buf)
+                    continue  # re-plan; resume from dst watermark
+                except StaleBuffer:
+                    # The sender's copy was abandoned/restarted away, but its
+                    # node is alive: invalidate that single location and retry.
+                    with self._dir_lock:
+                        self.directory.release_source(object_id, loc.node, epoch)
+                        self.directory.drop_location(object_id, loc.node)
+                        self._withdraw_empty_partial(node, object_id, dst_buf)
+                    continue
+                except SourceStalled:
+                    # Source watermark wedged but other copies exist: free
+                    # the slot and re-plan (resuming, not restarting).
+                    with self._dir_lock:
+                        self.directory.release_source(object_id, loc.node, epoch)
+                    continue
                 with self._dir_lock:
-                    self.directory.fail_node(loc.node)
-                continue
-            except StaleBuffer:
-                # The sender's copy was abandoned/restarted away, but its
-                # node is alive: invalidate that single location and retry.
+                    self.directory.release_source(object_id, loc.node, epoch)
+                    if self.directory.is_deleted(object_id) or object_id not in self.meta:
+                        # Deleted mid-transfer: drop our copy instead of
+                        # silently re-adding the object.
+                        self.stores[node].delete(object_id)
+                        self.directory.drop_location(object_id, node)
+                        raise ObjectLost(object_id)
+                    if node in self.dead:
+                        # Receiver died between the last streamed window and
+                        # completion: publishing would advertise a copy at a
+                        # dead node forever.
+                        raise DeadNode(str(node))
+                    self.directory.publish_complete(object_id, node, size)
+                return dst_buf
+        finally:
+            if owns_stream[0]:
                 with self._dir_lock:
-                    self.directory.drop_location(object_id, loc.node)
-                continue
-            with self._dir_lock:
-                if self.directory.is_deleted(object_id) or object_id not in self.meta:
-                    # Deleted mid-transfer: drop our copy instead of
-                    # silently re-adding the object at check-in.
-                    self.stores[node].delete(object_id)
-                    self.directory.return_location(object_id, loc.node)  # drops tombstoned loc
-                    raise ObjectLost(object_id)
-                if node in self.dead:
-                    # Receiver died between the last streamed window and
-                    # check-in: publishing would advertise a copy at a
-                    # dead node forever.
-                    self.directory.return_location(object_id, loc.node)
-                    raise DeadNode(str(node))
-                self.directory.publish_complete(object_id, node, size)
-                self.directory.return_location(object_id, loc.node)
-            return dst_buf
+                    self._fetching.discard(key)
+                    # A sibling fetch may have re-checked between our last
+                    # directory event and this discard, seen the key still
+                    # claimed, and gone back to sleep: wake directory
+                    # waiters so it re-plans (or observes the loss) now
+                    # instead of riding its deadline.  Terminal exits are
+                    # rare; the broadcast wakeup is once per fetch, never
+                    # per window.
+                    self._wake_membership_waiters()
+
+    def _withdraw_empty_partial(self, node: int, object_id: str, dst_buf) -> None:
+        """A stream leg failed before its first byte landed: withdraw our
+        0-byte partial advertisement while we have no active source
+        (attempt() re-publishes it with the next selected leg).  An empty
+        partial is never a feasible source, but its *location* keeps
+        ``available_elsewhere`` true for every other receiver -- when a
+        broadcast origin dies before anyone has bytes, a ring of empty
+        partials would otherwise keep the whole cohort hoping in each
+        other until the deadline instead of observing ObjectLost now.
+        Caller holds the directory lock."""
+        if dst_buf.bytes_present == 0:
+            self.directory.drop_location(object_id, node)
+
+    def _refresh_watermarks(self, object_id: str) -> None:
+        """Planner-side directory hygiene for one object (caller holds the
+        directory lock): drop locations stranded at dead nodes -- so
+        availability reflects reality and a fully-lost object raises
+        ObjectLost promptly -- and refresh each live partial's watermark
+        from its actual store buffer.  Streams publish only their
+        0 -> positive transition; the authoritative byte count for
+        *selection* is read here, at planning time."""
+        for l in self.directory.locations(object_id):
+            if l.node in self.dead:
+                self.directory.drop_location(object_id, l.node)
+            elif l.progress is not Progress.COMPLETE:
+                buf = self.stores[l.node].get(object_id)
+                if buf is not None and buf.bytes_present > l.bytes_present:
+                    self.directory.update_progress(
+                        object_id, l.node, buf.bytes_present
+                    )
 
     def _abandon_partial(self, node: int, object_id: str) -> None:
         """A fetch gave up (object lost / deadline): if we hold only an
@@ -350,37 +543,86 @@ class LocalCluster:
         src_buf: ChunkedBuffer,
         dst_buf: ChunkedBuffer,
         object_id: str,
+        start: int = 0,
+        publish_progress: bool = False,
     ):
         """Windowed zero-copy pipelined copy gated on source progress.
 
-        Each iteration drains every byte the source has made available
-        since the last one (one lock acquisition per *window*, not per
-        chunk) and forwards it as a single zero-copy view; ``write_chunk``
-        advances the destination watermark, waking only its own waiters.
+        Each iteration drains what the source has made available since the
+        last one (one lock acquisition per *window*, not per chunk) and
+        forwards it as a single zero-copy view; ``write_chunk`` advances
+        the destination watermark, waking only its own waiters.  Windows
+        are capped so every object yields >= PIPELINE_MIN_WINDOWS watermark
+        advances -- downstream receivers chasing this copy overlap with
+        the inbound leg instead of store-and-forwarding whole objects.
         With ``pace`` set, windows are capped at one chunk to preserve the
         chunk-granular interleaving the pipelining tests rely on.
+
+        ``start`` resumes a re-planned transfer from the destination
+        watermark (bytes below it are immutable and identical on every
+        copy).  ``publish_progress`` advertises the destination watermark
+        in the directory when the FIRST window lands -- the 0 -> positive
+        transition that makes this in-flight copy a *feasible* source and
+        wakes blocked receivers (tree formation).  Later watermark values
+        are refreshed lazily by planners (``_refresh_watermarks``) at
+        query time: taking the directory lock once per window from every
+        concurrent stream measurably convoys the whole storm.
+
+        Raises SourceStalled when the source watermark stops advancing
+        for ``stall_timeout`` while the directory knows another copy.
         """
-        pos = 0
+        pos = start
         total = src_buf.size
-        while pos < total:
-            avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
-            if src in self.dead:
-                raise DeadNode(str(src))
-            if src_buf.failed:
-                raise StaleBuffer(f"{object_id}@{src}")
-            if avail <= pos:
-                continue  # timed out: re-check membership, wait again
-            if self.pace:
-                avail = min(avail, pos + src_buf.chunk_size)
-                time.sleep(self.pace)
-            if dst in self.dead:
-                raise DeadNode(str(dst))
-            window = src_buf.view(pos, avail)  # immutable below watermark
-            dst_buf.write_chunk(pos, window)
-            self._stats.windows += 1
-            with self._stats_lock:
-                self.bytes_sent_per_node[src] += avail - pos
-            pos = avail
+        window_cap = max(src_buf.chunk_size, -(-total // PIPELINE_MIN_WINDOWS))
+        window_cap += (-window_cap) % 64  # keep watermarks element-aligned
+        last_advance = time.time()
+        served = 0  # flushed to the shared counters once, in finally
+        try:
+            while pos < total:
+                avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+                if src in self.dead:
+                    raise DeadNode(str(src))
+                if src_buf.failed:
+                    raise StaleBuffer(f"{object_id}@{src}")
+                if avail <= pos:
+                    # Timed out with no progress: re-check membership; if
+                    # the source has been wedged past the stall budget and
+                    # another copy exists, re-plan rather than riding our
+                    # own deadline.
+                    if time.time() - last_advance >= self.stall_timeout:
+                        with self._dir_lock:
+                            elsewhere = any(
+                                l.node not in (src, dst) and l.node not in self.dead
+                                for l in self.directory.locations(object_id)
+                            )
+                        if elsewhere:
+                            raise SourceStalled(f"{object_id}@{src}")
+                    continue
+                last_advance = time.time()
+                if self.pace:
+                    avail = min(avail, pos + src_buf.chunk_size)
+                    time.sleep(self.pace)
+                else:
+                    avail = min(avail, pos + window_cap)
+                if dst in self.dead:
+                    raise DeadNode(str(dst))
+                window = src_buf.view(pos, avail)  # immutable below watermark
+                dst_buf.write_chunk(pos, window)
+                self._stats.windows += 1
+                served += avail - pos
+                first_window = pos == 0
+                pos = avail
+                if publish_progress and first_window and pos < total:
+                    # 0 -> positive: we just became a feasible source for
+                    # receivers with no progress; wake them.  One directory
+                    # round trip per stream, never per window.
+                    with self._dir_lock:
+                        self.directory.update_progress(object_id, dst, pos)
+        finally:
+            if served:
+                with self._stats_lock:
+                    self._stats.note_bytes_served(src, served)
+                    self.bytes_sent_per_node[src] += served
         with self._stats_lock:
             self.transfers.append((src, dst, object_id))
 
@@ -390,6 +632,34 @@ class LocalCluster:
         def run():
             try:
                 fut.set_result(self.get(node, object_id, timeout))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._spawn(run)
+        return fut
+
+    def prefetch_async(self, node: int, object_id: str, timeout: float = 30.0) -> Future:
+        """Land a complete local copy of ``object_id`` at ``node`` through
+        the adaptive broadcast tree WITHOUT materializing an array (the
+        serve fast path: weight pushes and fan-out inputs want bytes
+        staged, not values returned).  Resolves to the number of bytes
+        now local (0 for directory-inline small objects)."""
+        fut: Future = Future()
+
+        def run():
+            try:
+                deadline = time.time() + timeout
+                with self._dir_lock:
+                    self._check_alive(node)
+                    if self.directory.get_inline(object_id) is not None:
+                        fut.set_result(0)
+                        return
+                    local = self.stores[node].get(object_id)
+                if local is not None and local.complete:
+                    fut.set_result(local.size)
+                    return
+                buf = self._fetch(node, object_id, deadline)
+                fut.set_result(buf.size)
             except BaseException as e:  # noqa: BLE001
                 fut.set_exception(e)
 
@@ -473,14 +743,23 @@ class LocalCluster:
         A source may exist only as a directory inline entry (its producing
         node died after a small-object Put); it has no location, so the
         group is coordinated at ``fallback`` instead of blocking until the
-        deadline."""
+        deadline.
+
+        Locations stranded at dead nodes (a kill that raced the directory
+        cleanup, or a failover that resurrected a replica's stale view)
+        are dropped on sight: they must not keep ``_object_lost`` false,
+        or a group whose every candidate is stale/dead would spin hunting
+        a coordinator until the deadline instead of raising ObjectLost."""
 
         def attempt():
             inline_ready = False
             all_lost = True
             for oid in source_ids:
                 for l in self.directory.locations(oid):
-                    if l.progress is Progress.COMPLETE and l.node not in self.dead:
+                    if l.node in self.dead:
+                        self.directory.drop_location(oid, l.node)
+                        continue
+                    if l.progress is Progress.COMPLETE:
                         return l.node
                 inline_ready = inline_ready or self.directory.get_inline(oid) is not None
                 all_lost = all_lost and self._object_lost(oid)
@@ -648,7 +927,8 @@ class LocalCluster:
                     if local_buf is None:
                         raise ObjectLost(hop.dst_object)
                     out = self.stores[hop.dst_node].create(
-                        hop.out_object, size, pinned=True, chunk_size=self.chunk_size
+                        hop.out_object, size, pinned=True,
+                        chunk_size=self.chunk_size_for(size),
                     )
                     self.directory.publish_partial(hop.out_object, hop.dst_node, size)
                     return src_buf, local_buf, out
@@ -688,7 +968,7 @@ class LocalCluster:
         progress -- the streaming add of a reduce hop, vectorized over
         every chunk available per wakeup."""
         itemsize = np.dtype(dtype).itemsize
-        assert self.chunk_size % itemsize == 0
+        assert src_buf.chunk_size % itemsize == 0
         pos = 0
         total = src_buf.size
         while pos < total:
@@ -708,6 +988,7 @@ class LocalCluster:
             out.write_chunk(pos, c.view(np.uint8))
             self._stats.windows += 1
             with self._stats_lock:
+                self._stats.note_bytes_served(src, avail - pos)
                 self.bytes_sent_per_node[src] += avail - pos
             pos = avail
         with self._stats_lock:
@@ -728,7 +1009,7 @@ class LocalCluster:
             if src_buf is None:
                 return None
             dst_buf = self.stores[node].create(
-                object_id, src_buf.size, pinned=False, chunk_size=self.chunk_size
+                object_id, src_buf.size, pinned=False, chunk_size=src_buf.chunk_size
             )
             return src_buf, dst_buf
 
@@ -784,6 +1065,10 @@ class LocalCluster:
             self.dead.discard(node)
             old_store = self.stores[node]
             self.stores[node] = NodeStore(node, self.store_capacity, stats=self._stats)
+            # Pre-restart streams are dead: zero the node's outbound load
+            # and bump its charge epoch so their late releases cannot
+            # free slots charged by post-restart streams.
+            self.directory.reset_outbound(node)
             self._wake_membership_waiters()
         # Any transfer still reading the pre-restart store's buffers must
         # fail over (those copies are gone from the directory).

@@ -182,3 +182,59 @@ def t_binomial_store_forward(n_receivers: int, link: LinkSpec, size: float) -> f
     rounds, each a full store-and-forward object transfer."""
     rounds = math.ceil(math.log2(n_receivers + 1))
     return rounds * link.transfer_time(size)
+
+
+@dataclasses.dataclass(frozen=True)
+class BroadcastPolicy:
+    """Broadcast-tree shape for one (n_receivers, link, size) point.
+
+    ``max_out_degree`` caps *concurrent* outbound transfers per node (the
+    directory's load accounting enforces it); receivers self-organize into
+    a tree of that fan-out by chasing partial-copy watermarks.
+    """
+
+    strategy: str  # "pipelined" | "binomial"
+    max_out_degree: int
+
+
+def broadcast_policy(
+    n_receivers: int,
+    link: LinkSpec,
+    size: float,
+    chunk: float = 4 * 1024,
+    egress_sharing: bool = True,
+) -> BroadcastPolicy:
+    """Pick the broadcast-tree shape by comparing the two closed forms.
+
+    Bandwidth-bound regime (``t_pipelined_multicast`` wins: large objects)
+    -> a deep pipelined tree with small fan-out, so no sender divides its
+    outbound bandwidth too many ways and the origin sheds every receiver
+    past its first ``max_out_degree`` onto first-generation partial copies.
+
+    Latency-bound regime (``t_binomial_store_forward`` wins: small objects,
+    chunk serialization ~ latency) -> a shallow bushy tree: fan-out
+    ~log2(n+1) trades per-link bandwidth for fewer relay hops.
+
+    ``egress_sharing`` describes the transport: True when a node's
+    concurrent sends split one egress pipe (the simulator's FIFO NIC, the
+    paper's EC2 testbed -- pipelined fan-out 1, exactly the paper's
+    one-outbound-transfer rule); False when per-send capacity is
+    independent (the threaded cluster's paced streams, multi-queue NICs
+    -- fan-out 2 halves tree depth at no per-send cost).
+
+    Shared verbatim by the discrete-event simulator and ``LocalCluster``.
+    """
+    n = max(1, n_receivers)
+    if n == 1:
+        return BroadcastPolicy("pipelined", 1)
+    # The emergent tree's depth is unknown at planning time, so score the
+    # pipelined candidate at its chain-degenerate bound (depth n-1, the
+    # t_pipelined_multicast family with worst-case hops) against the
+    # binomial store-and-forward rounds: with chunked pipelining an extra
+    # hop costs one chunk + L, while a binomial round costs a whole
+    # object -- the forms cross where (n-1)(L + c/B) ~ log2(n+1) * S/B.
+    t_pipe = size / link.bandwidth + (n - 1) * (link.latency + chunk / link.bandwidth)
+    t_bin = t_binomial_store_forward(n, link, size)
+    if t_pipe <= t_bin:
+        return BroadcastPolicy("pipelined", 1 if egress_sharing else 2)
+    return BroadcastPolicy("binomial", max(2, math.ceil(math.log2(n + 1))))

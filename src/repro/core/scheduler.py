@@ -3,9 +3,15 @@
 Pure protocol state machines, shared by the discrete-event simulator
 (core/simulation.py) and the threaded in-process cluster (core/local.py):
 
-  * broadcast sender selection is entirely delegated to
-    ``ObjectDirectory.checkout_location`` (one location per query, complete
-    copies preferred, checked out while the transfer is in flight);
+  * ``select_source`` is the adaptive broadcast sender policy: among ALL
+    copies of an object (complete and in-flight partial) pick the
+    least-loaded feasible one -- feasible meaning its watermark *leads*
+    the receiver's own progress, so a partial copy can be chased
+    chunk-by-chunk but an empty peer can never be picked (which would
+    form a dependency cycle).  ``ObjectDirectory.select_source`` applies
+    it against the live location table plus per-node outbound-load
+    counters; ``checkout_location`` remains as the paper's original
+    one-outbound-transfer special case;
 
   * ``ChainState`` implements the arrival-order 1-D reduce chain: the
     coordinator observes source objects becoming ready and emits *hop*
@@ -24,7 +30,56 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.api import Location, Progress
+
+
+def select_source(
+    candidates: Sequence[Location],
+    *,
+    loads: Dict[int, int],
+    served: Optional[Dict[int, int]] = None,
+    min_lead: int = 0,
+    max_out_degree: Optional[int] = None,
+    tick: int = 0,
+) -> Optional[Location]:
+    """Least-loaded feasible source for one receiver-driven fetch.
+
+    A candidate is *feasible* when it is COMPLETE or its watermark
+    strictly leads the receiver's progress (``bytes_present > min_lead``):
+    a copy at or behind the receiver can never feed it, and picking one
+    could close a wait-for cycle between two chasing partials.
+
+    Among feasible candidates with outbound load below ``max_out_degree``
+    (None = uncapped) the least-loaded wins; ties prefer the holder that
+    has *served this object the fewest times* (``served``) -- the origin
+    sheds post-storm requests onto first-generation receivers instead of
+    being recycled the moment its slots free -- then COMPLETE copies,
+    then a rotating counter so repeated broadcasts spread across
+    equally-placed holders.  Returns None when every feasible source is
+    at its cap (the caller waits for a slot) or no candidate is feasible
+    yet (the caller waits for a watermark).
+    """
+    served = served or {}
+    feasible = [
+        l
+        for l in candidates
+        if l.progress is Progress.COMPLETE or l.bytes_present > min_lead
+    ]
+    if max_out_degree is not None:
+        feasible = [l for l in feasible if loads.get(l.node, 0) < max_out_degree]
+    if not feasible:
+        return None
+    return min(
+        feasible,
+        key=lambda l: (
+            loads.get(l.node, 0),
+            served.get(l.node, 0),
+            l.progress is not Progress.COMPLETE,
+            (l.node + tick) % 1000003,
+        ),
+    )
 
 
 @dataclasses.dataclass

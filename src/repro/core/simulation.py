@@ -41,7 +41,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.api import SMALL_OBJECT_THRESHOLD, Progress
 from repro.core.directory import ObjectDirectory
-from repro.core.planner import LinkSpec, EC2_LINK, use_two_dimensional
+from repro.core.planner import (
+    LinkSpec,
+    EC2_LINK,
+    broadcast_policy,
+    use_two_dimensional,
+)
 from repro.core.scheduler import ChainState, Hop, partition_groups
 
 # ---------------------------------------------------------------------------
@@ -308,7 +313,14 @@ class SimCluster:
         self.sim.process(driver())
         return done
 
-    def mem_stream(self, node: int, src_buf: SimBuffer, dst_buf: SimBuffer) -> Event:
+    def mem_stream(
+        self,
+        node: int,
+        src_buf: SimBuffer,
+        dst_buf: SimBuffer,
+        *,
+        on_progress: Optional[Callable] = None,
+    ) -> Event:
         """Executor<->store copy on one node (chunked, pipelined)."""
         spec = self.spec
         size = dst_buf.size
@@ -323,6 +335,8 @@ class SimCluster:
                 this = upto - k * csize
                 yield self.nodes[node].mem.serve(this / spec.mem_bandwidth)
                 dst_buf.advance(upto)
+                if on_progress:
+                    on_progress(dst_buf.bytes_present)
                 finished[0] += 1
                 if finished[0] == nchunks:
                     done.succeed()
@@ -375,10 +389,17 @@ class Hoplite:
             exec_buf = SimBuffer(self.sim, object_id + "#exec", size, content)
             exec_buf.fill(content)
             store_buf = self.c.new_buffer(node, object_id, size, content)
-            # Publish partial location BEFORE the copy completes.
+            # Publish partial location BEFORE the copy completes; advance
+            # its directory watermark as bytes land so the partial is a
+            # *feasible* adaptive-broadcast source (section 4.2).
             yield self.sim.timeout(self.spec.dir_latency)
             self.directory.publish_partial(object_id, node, size)
-            yield self.c.mem_stream(node, exec_buf, store_buf)
+            yield self.c.mem_stream(
+                node,
+                exec_buf,
+                store_buf,
+                on_progress=lambda b: self.directory.update_progress(object_id, node, b),
+            )
             self.directory.publish_complete(object_id, node, size)
 
         return self.sim.process(proc())
@@ -401,8 +422,27 @@ class Hoplite:
             local = self.c.nodes[node].buffers.get(object_id)
             if local is not None and local.complete:
                 return local
+            mine = self.c.nodes[node].buffers.get(object_id)
             while True:
-                loc = self.directory.checkout_location(object_id, remove=True, exclude=node)
+                loc = None
+                size = self.directory.size_of(object_id)
+                if size is not None:
+                    # Adaptive source selection: least-loaded copy whose
+                    # watermark leads us, fan-out capped by the shared
+                    # broadcast policy (the same code path as
+                    # LocalCluster.broadcast_out_degree).
+                    policy = broadcast_policy(
+                        max(1, self.spec.num_nodes - 1),
+                        self.spec.link,
+                        size,
+                        chunk=float(self.spec.chunks_for(size)[1]),
+                    )
+                    loc = self.directory.select_source(
+                        object_id,
+                        exclude=node,
+                        min_lead=mine.bytes_present if mine is not None else 0,
+                        max_out_degree=policy.max_out_degree,
+                    )
                 if loc is not None:
                     break
                 ev = self.sim.event()
@@ -416,19 +456,26 @@ class Hoplite:
             dst_buf = self.c.nodes[node].buffers.get(object_id)
             if dst_buf is None:
                 dst_buf = self.c.new_buffer(node, object_id, size, src_buf.content)
-            # Publish own partial location so later receivers can chain off us.
+            # Publish own partial location so later receivers can chain off
+            # us; watermark advances per delivered chunk make us feasible.
             self.directory.publish_partial(object_id, node, size)
             # Control message to the sender.
             yield self.sim.timeout(self.spec.link.latency)
             if to_executor:
                 exec_buf = SimBuffer(self.sim, object_id + "#exec", size)
                 copy_done = self.c.mem_stream(node, dst_buf, exec_buf)
-            net_done = self.c.net_stream(loc.node, node, src_buf, dst_buf)
+            net_done = self.c.net_stream(
+                loc.node,
+                node,
+                src_buf,
+                dst_buf,
+                on_progress=lambda b: self.directory.update_progress(object_id, node, b),
+            )
             yield net_done
             dst_buf.merge_content(src_buf.content)
             self.directory.publish_complete(object_id, node, size)
-            # Hand the sender slot back (section 4.3).
-            self.directory.return_location(object_id, loc.node)
+            # Free the sender's outbound slot (section 4.3).
+            self.directory.release_source(object_id, loc.node)
             if to_executor:
                 yield copy_done
             return dst_buf

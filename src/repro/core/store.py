@@ -46,9 +46,25 @@ class DataPlaneStats:
       * ``dir_wakeups``      -- control-plane (directory event) wakeups
       * ``windows``          -- drained transfer windows (lock acquisitions
         per streamed buffer; chunks/window >> 1 means the drain is working)
+
+    Plus per-node serving accounting for the adaptive broadcast tree:
+
+      * ``bytes_served``  -- node -> bytes streamed OUT of that node's
+        store (copy and reduce-hop traffic); the broadcast benchmark
+        asserts the origin serves O(out-degree) copies, not O(N)
+      * ``peak_outbound`` -- node -> max concurrent outbound transfers
+        observed (must stay within the broadcast policy's out-degree cap)
     """
 
-    __slots__ = ("wakeups", "notifies", "notified_waiters", "dir_wakeups", "windows")
+    __slots__ = (
+        "wakeups",
+        "notifies",
+        "notified_waiters",
+        "dir_wakeups",
+        "windows",
+        "bytes_served",
+        "peak_outbound",
+    )
 
     def __init__(self):
         self.wakeups = 0
@@ -56,9 +72,21 @@ class DataPlaneStats:
         self.notified_waiters = 0
         self.dir_wakeups = 0
         self.windows = 0
+        self.bytes_served: Dict[int, int] = {}
+        self.peak_outbound: Dict[int, int] = {}
 
-    def as_dict(self) -> Dict[str, int]:
-        return {k: getattr(self, k) for k in self.__slots__}
+    def note_bytes_served(self, node: int, nbytes: int) -> None:
+        self.bytes_served[node] = self.bytes_served.get(node, 0) + nbytes
+
+    def note_outbound(self, node: int, concurrent: int) -> None:
+        if concurrent > self.peak_outbound.get(node, 0):
+            self.peak_outbound[node] = concurrent
+
+    def as_dict(self) -> Dict[str, object]:
+        out = {k: getattr(self, k) for k in self.__slots__ if k not in ("bytes_served", "peak_outbound")}
+        out["bytes_served"] = dict(self.bytes_served)
+        out["peak_outbound"] = dict(self.peak_outbound)
+        return out
 
 
 class BufferFailed(RuntimeError):

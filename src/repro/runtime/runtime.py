@@ -154,9 +154,16 @@ class Runtime:
         ref = ObjectRef(self)
         node = self._pick_node(node)
         ref.node = node
-        self.cluster.put(node, ref.id, np.asarray(value))
+        value = np.asarray(value)
+        self.cluster.put(node, ref.id, value)
         with self._lock:
             self._refs[ref.id] = ref
+            # Put lineage (section 7): the value is in hand, so losing the
+            # last copy to a node kill is recoverable by re-putting it on
+            # a surviving node -- without this, a broadcast origin dying
+            # before any receiver completes loses the object for good
+            # (tasks have re-execution lineage; puts deserve the same).
+            self._lineage[ref.id] = (lambda v=value: v, (), {}, node)
         ref.ready.set()
         self._fire_callbacks(ref)
         return ref
@@ -259,6 +266,41 @@ class Runtime:
             # same refs must not accrete one closure+Event per call.
             for r in refs:
                 r.remove_done_callback(on_done)
+
+    def broadcast(
+        self,
+        ref: ObjectRef,
+        nodes: Sequence[int],
+        timeout: float = 60.0,
+        block: bool = True,
+    ) -> List:
+        """Stage ``ref``'s object at every node in ``nodes`` through the
+        adaptive receiver-driven broadcast tree (the serve fast path:
+        weight hot-swap pushes and ensemble fan-out).
+
+        Issues all prefetches concurrently -- the directory's load-aware
+        source selection turns them into a pipelined multicast tree, the
+        origin serving only its out-degree.  Bytes are landed in each
+        node's store without materializing arrays.  With ``block=False``
+        returns the in-flight futures (fire-and-forget prefetch that
+        overlaps queueing delay); per-node failures are the node's
+        problem -- it pulls on first use instead."""
+        ref.ready.wait(timeout=timeout)
+        if ref.error is not None:
+            raise TaskError(str(ref.error)) from ref.error
+        targets = dict.fromkeys(
+            n for n in nodes if n not in self.cluster.dead
+        )
+        futs = [
+            self.cluster.prefetch_async(n, ref.id, timeout=timeout) for n in targets
+        ]
+        if block:
+            for f in futs:
+                try:
+                    f.result(timeout=timeout)
+                except Exception:  # noqa: BLE001 -- a target died mid-stage
+                    pass  # it will pull on first request instead
+        return futs
 
     def reduce(
         self,

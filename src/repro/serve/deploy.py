@@ -1,11 +1,12 @@
 """Versioned weight deployment over the Hoplite broadcast tree.
 
-``publish`` Puts the weight object ONCE; replicas then stage it with one
-tiny task each, and the receiver-driven broadcast (directory checkout +
-partial-copy relaying) fans the bytes out as a pipelined tree -- the
-publisher's NIC sends the object roughly once, not ``n`` times (paper
-section 4.3; the paper's 3.3x ensemble-serving result rides on exactly
-this path).
+``publish`` Puts the weight object ONCE, then stages it at every alive
+replica with ``runtime.broadcast`` -- concurrent receiver-driven
+prefetches that the directory's load-aware source selection organizes
+into a pipelined multicast tree (partial-copy relaying, per-node
+out-degree caps), so the publisher's NIC sends the object its out-degree
+times, not ``n`` times (paper section 4.3; the paper's 3.3x
+ensemble-serving result rides on exactly this path).
 
 Hot swap: the current-version pointer flips only after every alive
 replica has a complete staged copy, so in-flight requests keep the
@@ -20,13 +21,6 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
-
-
-def _stage(weights: np.ndarray) -> np.ndarray:
-    """Replica-side staging task: materializing the argument IS the work
-    (the executor's Get pulls the weights through the broadcast tree);
-    return a tiny receipt, not the weights again."""
-    return np.asarray(weights, dtype=np.float64).ravel()[:1]
 
 
 class WeightDeployment:
@@ -94,23 +88,19 @@ class WeightDeployment:
         prefetch: bool = True,
         timeout: float = 60.0,
     ) -> int:
-        """Put the weight object once, fan it to all alive replicas, then
-        atomically flip the current-version pointer (hot swap)."""
+        """Put the weight object once, fan it to all alive replicas
+        through the adaptive broadcast tree (``runtime.broadcast``: no
+        staging tasks, no materialized arrays -- bytes land directly in
+        each replica's store), then atomically flip the current-version
+        pointer (hot swap)."""
         version = next(self._counter)
         ref = self.runtime.put(np.asarray(weights), node=source_node)
         if prefetch:
-            receipts = [
-                self.runtime.remote(_stage, ref, node=r.node)
-                for r in self.replicas
-                if r.alive
-            ]
-            for rec in receipts:
-                try:
-                    self.runtime.get(rec, node=rec.node, timeout=timeout)
-                except Exception:  # noqa: BLE001 -- a replica died mid-stage
-                    pass  # it will pull on first request instead
-            for rec in receipts:  # receipts are throwaway: reclaim now
-                rec.add_done_callback(lambda r: self.runtime.delete([r]))
+            self.runtime.broadcast(
+                ref,
+                [r.node for r in self.replicas if r.alive],
+                timeout=timeout,
+            )
         with self._lock:
             self._versions[version] = ref
             self._current = version
