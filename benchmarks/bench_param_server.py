@@ -162,16 +162,38 @@ def async_ps(impl: str, n_nodes: int) -> float:
     return updates_done[0] / max(1e-9, t)
 
 
-def run() -> None:
-    for n in (8, 16):
+def collect(node_counts=(8, 16)) -> dict:
+    """Figure-8 numbers as a JSON-able dict (wired into ``run.py --json``
+    so the tracked ``BENCH_core.json`` trajectory carries the async/sync
+    SGD deltas alongside the threaded data-plane scenarios)."""
+    out = {}
+    for n in node_counts:
         hs = sync_ps("hoplite", n)
         rs = sync_ps("ray", n)
         ms = sync_ps("mpi", n)
+        ha = async_ps("hoplite", n)
+        ra = async_ps("ray", n)
+        out[str(n)] = {
+            "sync_steps_per_s": {
+                "hoplite": round(hs, 4),
+                "ray": round(rs, 4),
+                "mpi": round(ms, 4),
+            },
+            "sync_speedup_vs_ray_x": round(hs / rs, 2),
+            "async_updates_per_s": {"hoplite": round(ha, 4), "ray": round(ra, 4)},
+            "async_speedup_vs_ray_x": round(ha / ra, 2),
+        }
+    return out
+
+
+def run() -> None:
+    stats = collect()
+    for n, s in stats.items():
+        hs, rs, ms = (s["sync_steps_per_s"][k] for k in ("hoplite", "ray", "mpi"))
         emit(f"sync_ps_hoplite_{n}n_steps_per_s", 1e6 / hs, f"speedup_vs_ray={hs/rs:.1f}x vs_mpi={hs/ms:.2f}x")
         emit(f"sync_ps_ray_{n}n_steps_per_s", 1e6 / rs, "")
         emit(f"sync_ps_mpi_{n}n_steps_per_s", 1e6 / ms, "")
-        ha = async_ps("hoplite", n)
-        ra = async_ps("ray", n)
+        ha, ra = (s["async_updates_per_s"][k] for k in ("hoplite", "ray"))
         emit(f"async_ps_hoplite_{n}n_updates_per_s", 1e6 / ha, f"speedup_vs_ray={ha/ra:.1f}x")
         emit(f"async_ps_ray_{n}n_updates_per_s", 1e6 / ra, "")
 

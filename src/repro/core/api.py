@@ -76,6 +76,12 @@ class Location:
     # the simulator/threaded store to enforce that a partial copy never
     # forwards bytes it has not yet received.
     bytes_present: int = 0
+    # True when the bytes are *generated* at this node (a reduce target
+    # being reduced into, a Put mid-copy) rather than relayed from another
+    # copy.  A producing partial keeps advancing with no upstream feed, so
+    # receivers chasing it must never conclude the cohort is stuck, and a
+    # reduce chain may admit it as a streaming source before COMPLETE.
+    producing: bool = False
 
 
 class ObjectLost(RuntimeError):

@@ -98,17 +98,34 @@ class ObjectDirectory:
 
     # -- publishing --------------------------------------------------------
 
-    def publish_partial(self, object_id: str, node: int, size: Optional[int] = None) -> None:
+    def publish_partial(
+        self,
+        object_id: str,
+        node: int,
+        size: Optional[int] = None,
+        producing: bool = False,
+    ) -> None:
         """A node is *about to* hold this object (Put started / transfer
-        started).  Partial copies can act as senders (section 4.2)."""
+        started).  Partial copies can act as senders (section 4.2).
+
+        ``producing`` marks the copy as *generated* at ``node`` (a reduce
+        target being reduced into) rather than relayed: consumers may
+        stream from it before any complete copy exists, and the stuck-
+        cohort detector must never declare it lost while its node lives.
+        A re-publish keeps the existing watermark (planners refresh it
+        from the store buffer anyway) and is producing-sticky."""
         shard = self._shard(object_id)
         if object_id in shard.deleted:
             return
         if size is not None:
             shard.size[object_id] = size
         loc = shard.locations[object_id].get(node)
-        if loc is None or loc.progress is Progress.PARTIAL:
-            shard.locations[object_id][node] = Location(node, Progress.PARTIAL, 0)
+        if loc is None:
+            shard.locations[object_id][node] = Location(
+                node, Progress.PARTIAL, 0, producing=producing
+            )
+        elif loc.progress is Progress.PARTIAL and producing:
+            loc.producing = True
         self._notify(shard, object_id)
 
     def publish_complete(self, object_id: str, node: int, size: int) -> None:
@@ -232,6 +249,17 @@ class ObjectDirectory:
 
     def charge_epoch(self, node: int) -> int:
         """Capture alongside a select_source charge; pass to release_source."""
+        return self._node_epoch.get(node, 0)
+
+    def charge_source(self, object_id: str, node: int) -> int:
+        """Charge one outbound slot on ``node`` for a stream that was NOT
+        planned through :meth:`select_source` (reduce-chain hops): the
+        node's egress is busy either way, and the shared load counter is
+        what lets broadcast receivers shed onto reduce-idle holders.
+        Returns the charge epoch; pair with :meth:`release_source` -- a
+        release after the node's fail/restart becomes a no-op, so a dead
+        hop can never free a slot charged by post-restart streams."""
+        self._outbound[node] += 1
         return self._node_epoch.get(node, 0)
 
     def reset_outbound(self, node: int) -> None:
@@ -428,9 +456,9 @@ class ReplicatedDirectory(ObjectDirectory):
         for r in self.replicas:
             getattr(r, method)(*args, **kwargs)
 
-    def publish_partial(self, object_id, node, size=None):
-        super().publish_partial(object_id, node, size)
-        self._mirror("publish_partial", object_id, node, size)
+    def publish_partial(self, object_id, node, size=None, producing=False):
+        super().publish_partial(object_id, node, size, producing)
+        self._mirror("publish_partial", object_id, node, size, producing)
 
     def publish_complete(self, object_id, node, size):
         super().publish_complete(object_id, node, size)

@@ -21,6 +21,18 @@ whose fan-out is capped by the shared broadcast policy
 (``planner.broadcast_policy``), and a source failure or stall mid-stream
 re-plans to another copy and resumes from the current watermark.
 
+Reduce is the same machinery pointed upstream (README "Pipelined reduce
+and fused allreduce"): every chain target -- group partials included --
+is advertised as a *producing* partial before its first byte, consumers
+(the next hop, the 2-D top chain, fused-allreduce broadcast receivers)
+stream from it as soon as its watermark leads, and a participant death
+mid-stream RE-SPLICES the chain: the consumer keeps its prefix, rebuilds
+the lost partial from still-live copies via the chain lineage (same fold
+association, byte-identical), and resumes from its own watermark --
+never a subtree restart.  ``allreduce`` fuses reduce and broadcast into
+one pipeline bounded by a single fill past the reduce
+(``planner.allreduce_policy``, shared with the simulator).
+
 Concurrency model (README "Data-plane concurrency model"):
 
   * Data plane: every ``ChunkedBuffer`` owns its progress watermark (its
@@ -52,6 +64,7 @@ import numpy as np
 
 from repro.core.api import (
     DEFAULT_CHUNK_SIZE,
+    ObjectAlreadyExists,
     ObjectLost,
     Progress,
     ReduceOp,
@@ -59,7 +72,13 @@ from repro.core.api import (
     SUM,
 )
 from repro.core.directory import ObjectDirectory, ReplicatedDirectory
-from repro.core.planner import LinkSpec, EC2_LINK, broadcast_policy, use_two_dimensional
+from repro.core.planner import (
+    LinkSpec,
+    EC2_LINK,
+    allreduce_policy,
+    broadcast_policy,
+    use_two_dimensional,
+)
 from repro.core.scheduler import ChainState, partition_groups
 from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore
 
@@ -380,9 +399,16 @@ class LocalCluster:
                         if locs and all(
                             l.progress is not Progress.COMPLETE for l in locs
                         ):
-                            frontier = max(l.bytes_present for l in locs)
-                            if progress >= frontier:
-                                raise ObjectLost(object_id)
+                            # A *producing* partial at a live node (a
+                            # reduce target mid-production) advances with
+                            # no upstream feed: the cohort is not stuck,
+                            # it is waiting on the producer.
+                            if not any(
+                                l.producing and l.node not in self.dead for l in locs
+                            ):
+                                frontier = max(l.bytes_present for l in locs)
+                                if progress >= frontier:
+                                    raise ObjectLost(object_id)
                     return None  # all feasible sources busy/behind: wait
                 src_buf = self.stores[loc.node].get(object_id)
                 if src_buf is None or src_buf.failed:
@@ -525,16 +551,22 @@ class LocalCluster:
                         object_id, l.node, buf.bytes_present
                     )
 
-    def _abandon_partial(self, node: int, object_id: str) -> None:
+    def _abandon_partial(self, node: int, object_id: str, always_drop: bool = False) -> None:
         """A fetch gave up (object lost / deadline): if we hold only an
         incomplete partial, withdraw its directory advertisement and drop
         it.  NodeStore.delete fails the incomplete buffer, so downstream
-        relays chained off it fail over or observe ObjectLost promptly."""
+        relays chained off it fail over or observe ObjectLost promptly.
+
+        ``always_drop`` also withdraws an advertisement with NO buffer
+        behind it yet -- a producing reduce target that failed before its
+        first byte would otherwise keep chasers hoping forever."""
         with self._dir_lock:
             candidate = self.stores[node].get(object_id)
             if candidate is not None and not candidate.complete:
                 self.stores[node].delete(object_id)  # fails the buffer
                 self.directory.drop_location(object_id, node)  # notifies waiters
+            elif candidate is None and always_drop:
+                self.directory.drop_location(object_id, node)
 
     def _stream_copy(
         self,
@@ -675,14 +707,26 @@ class LocalCluster:
         source_ids: Sequence[str],
         op: ReduceOp = SUM,
         timeout: float = 60.0,
+        _meta: Optional[Tuple] = None,
     ) -> str:
         """Blocking chained reduce (paper section 4.3), including the 2-D
-        sqrt(n) decomposition when n*B*L > S."""
+        sqrt(n) decomposition when n*B*L > S.
+
+        The whole path is one watermark-driven pipeline (README "Pipelined
+        reduce and fused allreduce"): every chain target -- group partials
+        included -- is advertised as a *producing* partial before its
+        first byte, and the 2-D top chain admits a group the moment its
+        watermark turns positive, streaming from the still-reducing
+        partial instead of waiting behind a completion barrier."""
         self._check_alive(node)
         deadline = time.time() + timeout
-        # Wait for the first source to learn dtype/shape/size.
-        first = self._wait_any_meta(source_ids, deadline)
-        dtype, shape = self.meta[first]
+        if _meta is None:
+            # Wait for the first source to learn dtype/shape/size; every
+            # chain below inherits it (one directory subscription round
+            # trip per reduce, not one per chain level).
+            first = self._wait_any_meta(source_ids, deadline)
+            _meta = self.meta[first]
+        dtype, shape = _meta
         size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
         n = len(source_ids)
         if n > 3 and use_two_dimensional(n, self.link, size):
@@ -694,10 +738,28 @@ class LocalCluster:
                     sub_id = f"{target_id}/g{gi}"
                     coord = self._first_location(group, deadline, fallback=node)
                     sub_ids.append(sub_id)
-                    futs.append(self._reduce_async(coord, sub_id, group, op, deadline))
+                    fut = self._reduce_async(coord, sub_id, group, op, deadline, _meta)
+                    # A group that fails BEFORE advertising its target (its
+                    # coordinator died first) leaves no location, meta, or
+                    # tombstone behind -- the top chain would wait for an
+                    # event that is never coming.  Mark the sub-target lost
+                    # on any group failure so the top chain observes it NOW.
+                    fut.add_done_callback(
+                        lambda f, sid=sub_id: f.exception() is not None
+                        and self.delete(sid)
+                    )
+                    futs.append(fut)
+                # NO barrier here: the top chain consumes the group
+                # partials as streaming sources while they are still being
+                # reduced.  A group failure surfaces through the directory
+                # (its producing advertisement is withdrawn -> ObjectLost
+                # in the top chain) and through the futures below.
+                result = self._reduce_chain_blocking(
+                    node, target_id, sub_ids, op, deadline, meta=_meta
+                )
                 for f in futs:
                     f.result(timeout=max(0.0, deadline - time.time()))
-                return self._reduce_chain_blocking(node, target_id, sub_ids, op, deadline)
+                return result
             finally:
                 # Group partials are internal: reclaim them on success AND
                 # on failure (they are pinned at their coordinators and
@@ -706,21 +768,95 @@ class LocalCluster:
                 # sub_id afterwards; its own failure paths bound that.
                 for sid in sub_ids:
                     self.delete(sid)
-        return self._reduce_chain_blocking(node, target_id, list(source_ids), op, deadline)
+        return self._reduce_chain_blocking(
+            node, target_id, list(source_ids), op, deadline, meta=_meta
+        )
 
-    def _reduce_async(self, node, target_id, source_ids, op, deadline) -> Future:
+    def allreduce(
+        self,
+        nodes: Sequence[int],
+        target_id: str,
+        source_ids: Sequence[str],
+        op: ReduceOp = SUM,
+        timeout: float = 60.0,
+    ) -> str:
+        """Fused allreduce (paper 4.3-4.4 composed): reduce into
+        ``nodes[0]`` while every other node broadcast-chases the producing
+        target through the adaptive multicast tree, so completion is
+        bounded by one pipeline fill past the reduce instead of two
+        serialized collectives.  ``planner.allreduce_policy`` (shared with
+        the simulator) decides when fusing wins; small inline-able objects
+        fall back to reduce-then-fetch."""
+        deadline = time.time() + timeout
+        root = nodes[0]
+        self._check_alive(root)
+        first = self._wait_any_meta(source_ids, deadline)
+        meta = self.meta[first]
+        dtype, shape = meta
+        size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        policy = allreduce_policy(
+            len(nodes),
+            self.link,
+            size,
+            chunk=float(self.chunk_size_for(size)),
+            egress_sharing=False,
+        )
+        if policy.fused:
+            # Advertise the producing target BEFORE the receivers start:
+            # their fetches subscribe to its feasibility transition
+            # instead of racing the root's first publication.
+            self._advertise_reduce_target(root, target_id, dtype, shape, size)
+        red: Future = Future()
+
+        def run_reduce():
+            try:
+                red.set_result(
+                    self.reduce(root, target_id, source_ids, op,
+                                timeout=max(0.0, deadline - time.time()), _meta=meta)
+                )
+            except BaseException as e:  # noqa: BLE001
+                red.set_exception(e)
+
+        self._spawn(run_reduce)
+        if not policy.fused:
+            red.result(timeout=max(0.0, deadline - time.time()))
+        futs = [
+            self.prefetch_async(n, target_id, timeout=max(0.0, deadline - time.time()))
+            for n in dict.fromkeys(nodes)
+            if n != root
+        ]
+        red.result(timeout=max(0.0, deadline - time.time()))
+        for f in futs:
+            f.result(timeout=max(0.0, deadline - time.time()))
+        return target_id
+
+    def _reduce_async(self, node, target_id, source_ids, op, deadline, meta=None) -> Future:
         fut: Future = Future()
 
         def run():
             try:
                 fut.set_result(
-                    self._reduce_chain_blocking(node, target_id, source_ids, op, deadline)
+                    self._reduce_chain_blocking(
+                        node, target_id, source_ids, op, deadline, meta=meta
+                    )
                 )
             except BaseException as e:  # noqa: BLE001
                 fut.set_exception(e)
 
         self._spawn(run)
         return fut
+
+    def _advertise_reduce_target(self, node, target_id, dtype, shape, size) -> None:
+        """Publish ``target_id`` as a *producing* partial at its receiver
+        before the first reduced byte exists: fused-allreduce receivers
+        (and a 2-D top chain) can subscribe to its watermark now, and the
+        stuck-cohort detector knows this copy is generated locally rather
+        than fed by another copy."""
+        with self._dir_lock:
+            self._check_alive(node)
+            self.directory.revive(target_id)  # explicit re-reduce clears tombstone
+            self.meta[target_id] = (np.dtype(dtype), tuple(shape))
+            self.directory.publish_partial(target_id, node, size, producing=True)
 
     def _wait_any_meta(self, source_ids, deadline) -> str:
         def attempt():
@@ -777,7 +913,13 @@ class LocalCluster:
         )
 
     def _reduce_chain_blocking(
-        self, node: int, target_id: str, source_ids: List[str], op: ReduceOp, deadline
+        self,
+        node: int,
+        target_id: str,
+        source_ids: List[str],
+        op: ReduceOp,
+        deadline,
+        meta: Optional[Tuple] = None,
     ) -> str:
         """Arrival-order 1-D chain driven by directory completion events.
 
@@ -788,13 +930,23 @@ class LocalCluster:
         chain = ChainState(node, tag=target_id)
         hop_futures: List[Future] = []
         intermediates: List[str] = []  # chain-generated partials to reclaim
-        first = self._wait_any_meta(source_ids, deadline)
-        dtype, shape = self.meta[first]
+        if meta is None:
+            first = self._wait_any_meta(source_ids, deadline)
+            meta = self.meta[first]
+        dtype, shape = meta
+        size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        self._advertise_reduce_target(node, target_id, dtype, shape, size)
         try:
             return self._run_chain(
                 chain, node, target_id, source_ids, op, deadline,
                 dtype, shape, hop_futures, intermediates,
             )
+        except BaseException:
+            # Withdraw the producing advertisement (and fail any partial
+            # target buffer) so fused receivers chasing this target
+            # observe the loss NOW instead of riding their deadlines.
+            self._abandon_partial(node, target_id, always_drop=True)
+            raise
         finally:
             # Reclaim chain partials on success AND failure (hop outputs
             # are pinned at their nodes; a failed reduce must not leak one
@@ -842,157 +994,483 @@ class LocalCluster:
                     if oid not in pending:
                         continue
                     with self._dir_lock:
-                        locs = [
+                        live = [
                             l
                             for l in self.directory.locations(oid)
-                            if l.progress is Progress.COMPLETE
-                            and l.node not in self.dead
+                            if l.node not in self.dead
                         ]
+                        complete = [
+                            l for l in live if l.progress is Progress.COMPLETE
+                        ]
+                        # Streaming admission: a *producing* partial (a
+                        # reduce target still being reduced into) joins the
+                        # chain as soon as its watermark turns positive --
+                        # its bytes below the watermark are final.  This is
+                        # what lets the 2-D top chain start before any
+                        # group completes.
+                        producing = []
+                        if not complete:
+                            for l in live:
+                                if not l.producing:
+                                    continue
+                                buf = self.stores[l.node].get(oid)
+                                if buf is not None and buf.bytes_present > 0:
+                                    producing.append(l)
                         has_inline = self.directory.get_inline(oid) is not None
-                        lost = not locs and not has_inline and self._object_lost(oid)
+                        lost = (
+                            not complete
+                            and not producing
+                            and not has_inline
+                            and not any(l.producing for l in live)
+                            and self._object_lost(oid)
+                        )
                     if lost:
                         # This source was created and then lost for good
                         # (delete / failure drop): fail the reduce now, the
                         # framework's recovery owns it (section 7).
                         raise ObjectLost(oid)
-                    if not locs and not has_inline:
-                        continue  # partial publication; completion will re-fire
-                    src = locs[0].node if locs else node
+                    if not complete and not producing and not has_inline:
+                        continue  # partial publication; progress will re-fire
+                    if complete:
+                        src = complete[0].node
+                    elif producing:
+                        src = producing[0].node
+                    else:
+                        src = node
                     pending.discard(oid)
                     hop = chain.on_ready(src, oid)
                     if hop is not None:
                         intermediates.append(hop.out_object)
                         hop_futures.append(
-                            self._exec_hop_async(hop, dtype, shape, op, deadline)
+                            self._exec_hop_async(
+                                hop, dtype, shape, op, deadline, chain.lineage
+                            )
                         )
         finally:
             with self._dir_lock:
                 for oid in ids:
                     self.directory.unsubscribe(oid, cb)
                 self._membership_waiters.discard(ev)
-        for f in hop_futures:
-            f.result(timeout=max(0.0, deadline - time.time()))
-        # Final hop into the receiver + fold receiver-local objects.
+        return self._finalize_chain(
+            chain, node, target_id, op, deadline, dtype, shape, hop_futures
+        )
+
+    def _finalize_chain(
+        self, chain, node, target_id, op, deadline, dtype, shape, hop_futures
+    ) -> str:
+        """Stream the chain tail + receiver-local sources into the pinned
+        target buffer window-by-window, gated on every input's watermark.
+
+        This replaces the old materialize-then-Put finalization: the
+        target's watermark (and its directory progress) now advances
+        WHILE the chain is still producing, which is what fused-allreduce
+        receivers and a 2-D top chain chase.  If the tail's node dies
+        mid-stream, the chain is re-spliced: the lost partial is re-folded
+        from still-live copies (``_rebuild_partial``) and the fold resumes
+        from the target's own watermark -- prefix bytes are never
+        recomputed."""
+        size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
         final = chain.final_hop(target_id + "#in")
-        acc: Optional[np.ndarray] = None
+        with self._dir_lock:
+            self._check_alive(node)
+            if self.directory.is_deleted(target_id):
+                raise ObjectLost(target_id)
+            existing = self.stores[node].get(target_id)
+            if existing is not None and existing.complete:
+                # Objects are immutable once complete: re-reducing into an
+                # existing id must fail LOUDLY (the old put_array path
+                # raised here), not silently re-publish the stale bytes.
+                raise ObjectAlreadyExists(target_id)
+            out = self.stores[node].create(
+                target_id, size, pinned=True, chunk_size=self.chunk_size_for(size)
+            )
+            self.directory.publish_partial(target_id, node, size, producing=True)
+            locals_in: List[Tuple[ChunkedBuffer, str, Optional[int]]] = []
+            for oid in chain.local_objects:
+                buf = self.stores[node].get(oid)
+                if buf is None:
+                    inline = self.directory.get_inline(oid)
+                    if inline is None:
+                        raise ObjectLost(oid)
+                    buf = ChunkedBuffer.from_array(
+                        np.asarray(inline), chunk_size=self.chunk_size_for(size)
+                    )
+                locals_in.append((buf, oid, None))
+        assert final is not None or locals_in, "empty reduce"
+
         if final is not None:
-            buf = self._fetch_from(node, final.src_object, final.src_node, deadline)
-            acc = buf.to_array(dtype, shape).astype(dtype, copy=True)
-        for oid in chain.local_objects:
-            val = self.get(node, oid, timeout=max(0.0, deadline - time.time()))
-            acc = val.astype(dtype, copy=True) if acc is None else op(acc, val)
-        assert acc is not None, "empty reduce"
-        self.put(node, target_id, acc.reshape(shape))
-        # Chain partials (intermediates) are reclaimed by the caller's
-        # finally.  The receiver-side staging copy made by _fetch_from is
-        # never published, so Delete cannot find it through the directory:
-        # drop it here -- but only when the receiver holds no *published*
-        # copy of that id (it might, if the same object was Get here
-        # earlier).
-        if final is not None:
-            with self._dir_lock:
-                published_here = any(
-                    l.node == node
-                    for l in self.directory.locations(final.src_object)
+            src_node, src_buf = self._resolve_tail(final, node, chain.lineage,
+                                                   dtype, shape, op, deadline)
+        else:
+            src_node, src_buf = None, None
+        need_rebuild = False
+        while True:
+            if need_rebuild:
+                # Tail died / was abandoned mid-stream: re-splice -- fold
+                # resumes from the target's own watermark below, with a
+                # replacement rebuilt from still-live copies.
+                self._stats.resplices += 1
+                src_node, src_buf = node, self._rebuild_partial(
+                    node, final.src_object, chain.lineage, dtype, shape, op, deadline
                 )
-                if not published_here:
-                    self.stores[node].delete(final.src_object)
+                need_rebuild = False
+            inputs: List[Tuple[ChunkedBuffer, str, Optional[int]]] = []
+            if src_buf is not None:
+                inputs.append(
+                    (src_buf, final.src_object, src_node if src_node != node else None)
+                )
+            inputs.extend(locals_in)
+            epoch = None
+            if src_node is not None and src_node != node:
+                with self._dir_lock:
+                    epoch = self.directory.charge_source(final.src_object, src_node)
+                    self._stats.note_outbound(
+                        src_node, self.directory.outbound_load(src_node)
+                    )
+            try:
+                self._stream_fold(
+                    node, inputs, out, dtype, op, deadline,
+                    object_id=target_id, start=out.bytes_present,
+                    publish_progress=True,
+                )
+                break
+            except DeadNode as e:
+                if e.node_id == node or final is None:
+                    raise
+                need_rebuild = True
+            except StaleBuffer:
+                if final is None:
+                    raise ObjectLost(target_id)
+                need_rebuild = True
+            finally:
+                if epoch is not None:
+                    with self._dir_lock:
+                        self.directory.release_source(final.src_object, src_node, epoch)
+        # Hop futures are reaped leniently: the target's bytes are already
+        # complete and correct, and a hop we re-spliced around legitimately
+        # errored.  Genuine source loss surfaced through the fold above.
+        for f in hop_futures:
+            try:
+                f.result(timeout=max(0.0, deadline - time.time()))
+            except Exception:  # noqa: BLE001
+                pass
+        with self._dir_lock:
+            if node in self.dead:
+                raise DeadNode(str(node))
+            if self.directory.is_deleted(target_id) or target_id not in self.meta:
+                self.stores[node].delete(target_id)
+                self.directory.drop_location(target_id, node)
+                raise ObjectLost(target_id)
+            if size < SMALL_OBJECT_THRESHOLD:
+                self.directory.publish_inline(
+                    target_id, out.to_array(dtype, shape).copy(), size
+                )
+            self.directory.publish_complete(target_id, node, size)
         return target_id
 
-    def _exec_hop_async(self, hop, dtype, shape, op, deadline) -> Future:
+    def _resolve_tail(self, final, node, lineage, dtype, shape, op, deadline):
+        """Locate the chain tail's buffer for the final fold, waiting for
+        the producing hop thread to create it (the hop-issue race), or
+        rebuilding it locally when its node already died."""
+
+        def attempt():
+            if node in self.dead:
+                raise DeadNode(str(node))
+            if final.src_node in self.dead:
+                return ("rebuild",)
+            src_buf = self.stores[final.src_node].get(final.src_object)
+            if src_buf is None or src_buf.failed:
+                if self._object_lost(final.src_object):
+                    return ("rebuild",)
+                return None  # upstream hop has not created its output yet
+            return ("ok", src_buf)
+
+        got = self._await_directory(
+            [final.src_object], attempt, deadline,
+            what=f"reduce: tail {final.src_object} never appeared",
+        )
+        if got[0] == "rebuild":
+            self._stats.resplices += 1
+            return node, self._rebuild_partial(
+                node, final.src_object, lineage, dtype, shape, op, deadline
+            )
+        return final.src_node, got[1]
+
+    def _exec_hop_async(self, hop, dtype, shape, op, deadline, lineage) -> Future:
         """Run one chain hop: dst streams src's partial result in and
-        reduces it with its local object window-by-window."""
+        reduces it with its local object window-by-window.  If the
+        upstream node dies (or its buffer is abandoned) mid-stream, the
+        hop RE-SPLICES: the lost partial is re-folded from still-live
+        copies via the chain lineage and the fold resumes from this hop's
+        own output watermark -- no subtree restart, prefix bytes kept."""
         fut: Future = Future()
 
         def run():
+            size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
             try:
-                size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
 
                 def attempt():
                     """The upstream hop's thread may not have created its
                     output buffer yet: wait for its publish_partial event
                     instead of failing (or polling) -- the hop-issue race."""
-                    if hop.src_node in self.dead:
-                        raise ObjectLost(hop.src_object)
-                    src_buf = self.stores[hop.src_node].get(hop.src_object)
-                    if src_buf is None:
-                        if self._object_lost(hop.src_object):
-                            # The upstream intermediate was deleted (e.g. a
-                            # failed reduce's cleanup) or lost: it will
-                            # never be created -- fail the hop now.
-                            raise ObjectLost(hop.src_object)
-                        return None
-                    self.meta[hop.out_object] = (np.dtype(dtype), tuple(shape))
+                    if hop.dst_node in self.dead:
+                        raise ObjectLost(hop.out_object)
                     local_buf = self.stores[hop.dst_node].get(hop.dst_object)
                     if local_buf is None:
                         raise ObjectLost(hop.dst_object)
+                    rebuild = False
+                    src_buf = self.stores[hop.src_node].get(hop.src_object)
+                    if hop.src_node in self.dead:
+                        rebuild = True
+                    elif src_buf is None or src_buf.failed:
+                        if self._object_lost(hop.src_object):
+                            # Deleted/lost upstream: never coming as-is --
+                            # fall through to the lineage rebuild.
+                            rebuild = True
+                        else:
+                            return None
+                    self.meta[hop.out_object] = (np.dtype(dtype), tuple(shape))
                     out = self.stores[hop.dst_node].create(
                         hop.out_object, size, pinned=True,
                         chunk_size=self.chunk_size_for(size),
                     )
-                    self.directory.publish_partial(hop.out_object, hop.dst_node, size)
-                    return src_buf, local_buf, out
+                    self.directory.publish_partial(
+                        hop.out_object, hop.dst_node, size, producing=True
+                    )
+                    return src_buf, local_buf, out, rebuild
 
-                src_buf, local_buf, out = self._await_directory(
+                src_buf, local_buf, out, need_rebuild = self._await_directory(
                     [hop.src_object],
                     attempt,
                     deadline,
                     what=f"reduce hop: source {hop.src_object} never appeared",
                 )
-                try:
-                    self._stream_reduce(
-                        hop.src_node,
-                        hop.dst_node,
-                        src_buf,
-                        local_buf,
-                        out,
-                        dtype,
-                        op,
-                        object_id=hop.out_object,
-                    )
-                except StaleBuffer as e:
-                    raise ObjectLost(hop.src_object) from e
+                with self._stats_lock:
+                    self._stats.note_reduce_hop(hop.dst_node)
+                src_node = hop.src_node
+                while True:
+                    if need_rebuild:
+                        self._stats.resplices += 1
+                        src_buf = self._rebuild_partial(
+                            hop.dst_node, hop.src_object, lineage,
+                            dtype, shape, op, deadline,
+                        )
+                        src_node = hop.dst_node
+                        need_rebuild = False
+                    epoch = None
+                    if src_node != hop.dst_node:
+                        with self._dir_lock:
+                            epoch = self.directory.charge_source(
+                                hop.src_object, src_node
+                            )
+                            self._stats.note_outbound(
+                                src_node, self.directory.outbound_load(src_node)
+                            )
+                    try:
+                        self._stream_fold(
+                            hop.dst_node,
+                            [
+                                (src_buf, hop.src_object,
+                                 src_node if src_node != hop.dst_node else None),
+                                (local_buf, hop.dst_object, None),
+                            ],
+                            out,
+                            dtype,
+                            op,
+                            deadline,
+                            object_id=hop.out_object,
+                            start=out.bytes_present,
+                        )
+                        break
+                    except DeadNode as e:
+                        if e.node_id == hop.dst_node:
+                            raise ObjectLost(hop.out_object)
+                        need_rebuild = True  # re-splice from out watermark
+                    except StaleBuffer:
+                        need_rebuild = True
+                    finally:
+                        if epoch is not None:
+                            with self._dir_lock:
+                                self.directory.release_source(
+                                    hop.src_object, src_node, epoch
+                                )
                 with self._dir_lock:
                     if hop.dst_node in self.dead:
                         raise ObjectLost(hop.out_object)
                     self.directory.publish_complete(hop.out_object, hop.dst_node, size)
                 fut.set_result(hop.out_object)
             except BaseException as e:  # noqa: BLE001
+                # Mark the output lost -- tombstone + notify + fail any
+                # half-built buffer -- so downstream consumers wake NOW
+                # and re-splice around this hop (or observe the loss)
+                # instead of riding deadlines.  This must happen even when
+                # the hop died BEFORE creating its buffer (e.g. its local
+                # operand vanished): a consumer waiting for the output to
+                # appear has no other event coming.
+                self.delete(hop.out_object)
                 fut.set_exception(e)
 
         self._spawn(run)
         return fut
 
-    def _stream_reduce(self, src, dst, src_buf, local_buf, out, dtype, op, object_id: str = ""):
-        """out[w] = op(src[w], local[w]) window-by-window, gated on src
-        progress -- the streaming add of a reduce hop, vectorized over
-        every chunk available per wakeup."""
+    def _stream_fold(
+        self,
+        dst: int,
+        inputs: List[Tuple[ChunkedBuffer, str, Optional[int]]],
+        out: ChunkedBuffer,
+        dtype,
+        op,
+        deadline,
+        object_id: str = "",
+        start: int = 0,
+        publish_progress: bool = False,
+    ):
+        """out[w] = fold(op, inputs[0][w], inputs[1][w], ...) window-by-
+        window, gated on EVERY input's watermark -- the streaming add of a
+        reduce hop and of the chain finalization, vectorized over all
+        bytes available per wakeup.
+
+        ``inputs`` entries are (buffer, object_id, src_node): ``src_node``
+        names the remote holder of a streamed input (bytes-served
+        accounting, DeadNode on its death), None for a receiver-local
+        buffer.  A failed remote input raises DeadNode/StaleBuffer (the
+        caller re-splices); a failed local input raises ObjectLost.
+        ``start`` resumes a re-spliced fold from the output watermark --
+        bytes below it were folded from identical prefixes and are final.
+        """
         itemsize = np.dtype(dtype).itemsize
-        assert src_buf.chunk_size % itemsize == 0
-        pos = 0
-        total = src_buf.size
-        while pos < total:
-            avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
-            if src in self.dead:
-                raise DeadNode(str(src))
-            if src_buf.failed:
-                raise StaleBuffer(f"{object_id}@{src}")
-            if avail <= pos:
-                continue
-            if self.pace:
-                avail = min(avail, pos + src_buf.chunk_size)
-                time.sleep(self.pace)
-            a = src_buf.view(pos, avail).view(dtype)
-            b = local_buf.view(pos, avail).view(dtype)
-            c = op(a, b)
-            out.write_chunk(pos, c.view(np.uint8))
-            self._stats.windows += 1
-            with self._stats_lock:
-                self._stats.note_bytes_served(src, avail - pos)
-                self.bytes_sent_per_node[src] += avail - pos
-            pos = avail
-        with self._stats_lock:
-            self.transfers.append((src, dst, object_id))
+        pos = start
+        total = out.size
+        window_cap = max(out.chunk_size, -(-total // PIPELINE_MIN_WINDOWS))
+        window_cap += (-window_cap) % 64
+        assert window_cap % itemsize == 0
+        served: Dict[int, int] = {}
+        reduced = 0
+        first_pub = pos == 0
+        try:
+            while pos < total:
+                if time.time() > deadline:
+                    raise TimeoutError(f"reduce fold {object_id} timed out")
+                avail = total
+                for buf, oid, src in inputs:
+                    got = buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+                    if dst in self.dead:
+                        raise DeadNode(str(dst))
+                    if src is not None:
+                        if src in self.dead:
+                            raise DeadNode(str(src))
+                        if buf.failed:
+                            raise StaleBuffer(f"{oid}@{src}")
+                    elif buf.failed:
+                        raise ObjectLost(oid)
+                    avail = min(avail, got)
+                if avail <= pos:
+                    continue
+                if self.pace:
+                    avail = min(avail, pos + out.chunk_size)
+                    time.sleep(self.pace)
+                else:
+                    avail = min(avail, pos + window_cap)
+                acc = inputs[0][0].view(pos, avail).view(dtype)
+                for buf, _oid, _src in inputs[1:]:
+                    acc = op(acc, buf.view(pos, avail).view(dtype))
+                out.write_chunk(pos, acc.view(np.uint8))
+                self._stats.windows += 1
+                window = avail - pos
+                if len(inputs) > 1:
+                    reduced += window
+                for _buf, _oid, src in inputs:
+                    if src is not None:
+                        served[src] = served.get(src, 0) + window
+                first_window = pos == start
+                pos = avail
+                if publish_progress and first_pub and first_window and pos < total:
+                    # 0 -> positive: the producing target just became a
+                    # feasible source for fused-allreduce receivers and
+                    # downstream chains; wake them.  One directory round
+                    # trip per fold, never per window.
+                    with self._dir_lock:
+                        self.directory.update_progress(object_id, dst, pos)
+        finally:
+            if reduced or served:
+                with self._stats_lock:
+                    if reduced:
+                        self._stats.note_bytes_reduced(dst, reduced)
+                    for src, nbytes in served.items():
+                        self._stats.note_bytes_served(src, nbytes)
+                        self.bytes_sent_per_node[src] += nbytes
+                    for src in served:
+                        self.transfers.append((src, dst, object_id))
+
+    def _rebuild_partial(
+        self, node, object_id, lineage, dtype, shape, op, deadline
+    ) -> ChunkedBuffer:
+        """Re-splice support: reconstruct a lost chain partial at ``node``
+        from still-live state, byte-identical to the original.
+
+        Preference order per object: a live copy anywhere (complete, or a
+        producing partial we can chase to completion) is streamed in;
+        otherwise the partial's lineage pair (a, b) is rebuilt recursively
+        and re-folded with the SAME ``op(a, b)`` association the original
+        hop used -- so the replacement's bytes match the lost partial's
+        exactly and the resumed fold stays consistent with the prefix
+        already in the output.  Raises ObjectLost when a contribution's
+        every copy died with its node (framework recovery owns that)."""
+
+        def rebuild(oid: str) -> ChunkedBuffer:
+            while True:
+                if time.time() > deadline:
+                    raise TimeoutError(f"re-splice rebuild of {oid} timed out")
+                src = None
+                with self._dir_lock:
+                    for l in self.directory.locations(oid):
+                        if l.node in self.dead:
+                            continue
+                        buf = self.stores[l.node].get(oid)
+                        if buf is None or buf.failed:
+                            continue
+                        if l.progress is Progress.COMPLETE or l.producing:
+                            src = (l.node, buf)
+                            break
+                    inline = self.directory.get_inline(oid)
+                if src is not None:
+                    src_node, src_buf = src
+                    if src_node == node:
+                        # A local copy may still be producing: rebuild()
+                        # guarantees COMPLETE buffers (the lineage fold
+                        # below calls to_array), so chase it to the end;
+                        # if its producer fails, re-scan for another copy.
+                        while not src_buf.complete and not src_buf.failed:
+                            if time.time() > deadline:
+                                raise TimeoutError(f"re-splice rebuild of {oid} timed out")
+                            src_buf.wait_for_bytes(
+                                src_buf.size, timeout=_WATERMARK_RECHECK_S
+                            )
+                        if src_buf.failed:
+                            continue
+                        return src_buf
+                    staging = ChunkedBuffer(
+                        src_buf.size, src_buf.chunk_size, stats=self._stats
+                    )
+                    try:
+                        self._stream_copy(src_node, node, src_buf, staging, oid)
+                    except (DeadNode, StaleBuffer):
+                        continue  # that copy died too; re-scan / recurse
+                    return staging
+                if inline is not None:
+                    return ChunkedBuffer.from_array(np.asarray(inline))
+                pair = lineage.get(oid)
+                if pair is None:
+                    raise ObjectLost(oid)
+                a, b = pair
+                folded = op(
+                    rebuild(a).to_array(dtype, shape), rebuild(b).to_array(dtype, shape)
+                )
+                return ChunkedBuffer.from_array(
+                    np.ascontiguousarray(folded), stats=self._stats
+                )
+
+        return rebuild(object_id)
 
     def _fetch_from(self, node, object_id, src_node, deadline) -> ChunkedBuffer:
         """Stream a specific remote object into ``node`` (final chain hop)."""

@@ -197,6 +197,77 @@ class BroadcastPolicy:
     max_out_degree: int
 
 
+def t_fused_allreduce(
+    n_nodes: int, link: LinkSpec, size: float, chunk: float = 4 * 1024
+) -> float:
+    """Fused pipelined allreduce bound (paper sections 4.3-4.4 composed):
+    broadcast receivers chase the reduce target's watermark while the
+    root is still reducing into it, so completion is the reduce time plus
+    ONE broadcast pipeline fill -- tree-depth hops of one chunk's
+    serialization + latency each -- instead of reduce plus a full
+    broadcast serialized behind it."""
+    n = max(1, n_nodes)
+    if n == 1:
+        return 0.0
+    hops = math.ceil(math.log2(n))
+    return predicted_reduce_time(n, link, size) + hops * (
+        link.latency + chunk / link.bandwidth
+    )
+
+
+def t_sequential_allreduce(
+    n_nodes: int, link: LinkSpec, size: float, chunk: float = 4 * 1024
+) -> float:
+    """Reduce-then-broadcast with a completion barrier between the two
+    (the pre-fusion composition): the broadcast cannot start before the
+    last reduced byte exists."""
+    n = max(1, n_nodes)
+    if n == 1:
+        return 0.0
+    recv = n - 1
+    bp = broadcast_policy(recv, link, size, chunk=chunk)
+    if bp.strategy == "pipelined":
+        t_b = t_pipelined_multicast(recv, link, size, chunk)
+    else:
+        t_b = t_binomial_store_forward(recv, link, size)
+    return predicted_reduce_time(n, link, size) + t_b
+
+
+@dataclasses.dataclass(frozen=True)
+class AllreducePolicy:
+    """Whether to fuse the reduce->broadcast pipeline for one
+    (n_nodes, link, size) point, plus the broadcast-tree shape the
+    receivers use either way."""
+
+    fused: bool
+    broadcast: BroadcastPolicy
+    t_fused: float
+    t_sequential: float
+
+
+def allreduce_policy(
+    n_nodes: int,
+    link: LinkSpec,
+    size: float,
+    chunk: float = 4 * 1024,
+    egress_sharing: bool = True,
+) -> AllreducePolicy:
+    """Shared by the discrete-event simulator and ``LocalCluster``:
+    fuse whenever the closed forms say overlap wins.  Small (inline-able)
+    objects never fuse -- the directory answers them in one round trip at
+    completion, and there is no partial copy to chase."""
+    from repro.core.api import SMALL_OBJECT_THRESHOLD
+
+    n = max(1, n_nodes)
+    bp = broadcast_policy(
+        max(1, n - 1), link, size, chunk=chunk, egress_sharing=egress_sharing
+    )
+    t_f = t_fused_allreduce(n, link, size, chunk)
+    t_s = t_sequential_allreduce(n, link, size, chunk)
+    fused = n > 1 and size >= SMALL_OBJECT_THRESHOLD and t_f < t_s
+    return AllreducePolicy(fused=fused, broadcast=bp, t_fused=t_f, t_sequential=t_s)
+
+
 def broadcast_policy(
     n_receivers: int,
     link: LinkSpec,

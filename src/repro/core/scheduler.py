@@ -110,6 +110,12 @@ class ChainState:
         self._tail: Optional[Tuple[int, str]] = None  # (node, object_id)
         self._local: List[str] = []  # receiver-local ready objects
         self._hops = 0
+        # Contribution lineage: hop output -> (upstream partial, local
+        # source) folded into it, in ``op(a, b)`` argument order.  A
+        # consumer that loses its upstream mid-stream walks this map to
+        # re-fold exactly the lost prefix from still-live copies (the
+        # re-splice path) -- same association order, so byte-identical.
+        self.lineage: Dict[str, Tuple[str, str]] = {}
 
     @property
     def tail(self) -> Optional[Tuple[int, str]]:
@@ -132,6 +138,7 @@ class ChainState:
         self._hops += 1
         out_object = f"{self.tag}-hop{self._hops}-{object_id}"
         hop = Hop(src_node, src_object, node, object_id, out_object)
+        self.lineage[out_object] = (src_object, object_id)
         self._tail = (node, out_object)
         return hop
 

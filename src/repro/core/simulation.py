@@ -44,6 +44,7 @@ from repro.core.directory import ObjectDirectory
 from repro.core.planner import (
     LinkSpec,
     EC2_LINK,
+    allreduce_policy,
     broadcast_policy,
     use_two_dimensional,
 )
@@ -264,12 +265,17 @@ class SimCluster:
         *,
         on_progress: Optional[Callable] = None,
         reduce_into: bool = False,
+        extra_gate: Optional[SimBuffer] = None,
     ) -> Event:
         """Stream src_buf -> dst_buf over the network, chunk-pipelined.
 
         Gated on src availability (partial senders never forward bytes they
         do not hold).  ``reduce_into`` adds a memory-engine service per
-        chunk at the receiver (the streaming add of a reduce hop)."""
+        chunk at the receiver (the streaming add of a reduce hop).
+        ``extra_gate`` additionally gates each chunk on a second buffer's
+        watermark -- a reduce hop whose LOCAL operand is itself still
+        being produced (a fused 2-D group partial) must not fold bytes
+        that do not exist yet."""
         spec = self.spec
         if self.nodes[src].failed or self.nodes[dst].failed:
             ev = self.sim.event()
@@ -305,6 +311,8 @@ class SimCluster:
             for k in range(nchunks):
                 upto = min(size, (k + 1) * csize)
                 yield src_buf.wait_bytes(upto)
+                if extra_gate is not None:
+                    yield extra_gate.wait_bytes(upto)
                 this = upto - k * csize
                 yield self.nodes[src].egress.serve(this / spec.link.bandwidth)
                 # propagation: fire-and-forget so latency overlaps next chunk
@@ -492,6 +500,7 @@ class Hoplite:
         size: int,
         ready_events: Optional[Dict[str, Event]] = None,
         _top: bool = True,
+        _result_buf: Optional[SimBuffer] = None,
     ) -> Event:
         """Receiver-driven chained reduce (section 4.3).
 
@@ -503,8 +512,12 @@ class Hoplite:
         n = len(source_ids)
         two_d = n > 3 and use_two_dimensional(n, self.spec.link, size)
         if two_d:
-            return self._reduce_2d(node, target_id, source_ids, size, ready_events)
-        return self._reduce_chain(node, target_id, source_ids, size, ready_events, _top)
+            return self._reduce_2d(
+                node, target_id, source_ids, size, ready_events, _result_buf
+            )
+        return self._reduce_chain(
+            node, target_id, source_ids, size, ready_events, _top, _result_buf
+        )
 
     def _arrival_feed(self, source_ids: Dict[str, int], ready_events):
         """Yields (oid, node) in readiness order via directory subscription."""
@@ -544,46 +557,60 @@ class Hoplite:
         return next_arrival
 
     def _reduce_chain(
-        self, node, target_id, source_ids, size, ready_events, _top=True
+        self, node, target_id, source_ids, size, ready_events, _top=True,
+        result_buf: Optional[SimBuffer] = None,
     ) -> Event:
-        """1-D arrival-order chain with streaming hops."""
+        """1-D arrival-order chain with streaming hops.
+
+        The target is advertised as a *producing* partial up front and its
+        directory watermark advances with the final fold, so broadcast
+        receivers (fused allreduce) and a 2-D top chain stream from it
+        while the chain is still producing."""
 
         def proc():
             yield self.sim.timeout(self.spec.dir_latency)
+            result = result_buf or self.c.nodes[node].buffers.get(target_id)
+            if result is None:
+                result = self.c.new_buffer(node, target_id, size)
+            self.directory.publish_partial(target_id, node, size, producing=True)
             chain = ChainState(node, tag=target_id)
             next_arrival = self._arrival_feed(source_ids, ready_events)
             hop_events: List[Event] = []
-            all_content = frozenset()
+            arrived: List[SimBuffer] = []
             for _ in range(len(source_ids)):
                 oid, src_node = yield next_arrival()
                 src_node_buf = self.c.nodes[src_node].buffers.get(oid)
                 if src_node_buf is None:
                     src_node_buf = self.c.new_buffer(src_node, oid, size, frozenset([oid]))
                     src_node_buf.fill()
-                all_content = all_content | src_node_buf.content
+                arrived.append(src_node_buf)
                 hop = chain.on_ready(src_node, oid)
                 if hop is not None:
                     hop_events.append(self._exec_hop(hop, size))
             final = chain.final_hop(target_id)
-            result = self.c.nodes[node].buffers.get(target_id)
-            if result is None:
-                result = self.c.new_buffer(node, target_id, size)
-            self.directory.publish_partial(target_id, node, size)
             if final is not None:
                 src_buf = self.c.nodes[final.src_node].buffers[final.src_object]
                 yield self.sim.timeout(self.spec.link.latency)  # notify sender
                 yield self.c.net_stream(
-                    final.src_node, node, src_buf, result, reduce_into=True
+                    final.src_node, node, src_buf, result, reduce_into=True,
+                    on_progress=lambda b: self.directory.update_progress(
+                        target_id, node, b
+                    ),
                 )
                 result.merge_content(src_buf.content)
-            # Fold receiver-local source objects (streaming adds).
+            # Fold receiver-local source objects (streaming adds), gated on
+            # each one's own completion -- a local source may itself be a
+            # group partial still being produced (fused 2-D).
             for oid in chain.local_objects:
                 lb = self.c.nodes[node].buffers[oid]
+                yield lb.wait_bytes(lb.size)
                 result.merge_content(lb.content)
                 yield self.c.nodes[node].mem.serve(size / self.spec.reduce_bandwidth)
-            if not final and not chain.local_objects:
-                result.fill()
             result.advance(result.size)
+            # Contributor check against the buffers' FINAL contents (a
+            # fused sub-chain's content set is only complete once its own
+            # final fold ran, which strictly precedes this point).
+            all_content = frozenset().union(*(b.content for b in arrived)) if arrived else frozenset()
             assert result.content == all_content, (
                 f"reduce dropped contributions: {all_content - result.content}"
             )
@@ -607,16 +634,29 @@ class Hoplite:
 
         def proc():
             yield self.sim.timeout(self.spec.link.latency)  # coordinator notify
-            yield self.c.net_stream(hop.src_node, hop.dst_node, src_buf, out, reduce_into=True)
+            yield self.c.net_stream(
+                hop.src_node, hop.dst_node, src_buf, out, reduce_into=True,
+                # A fused 2-D group partial as the LOCAL operand: gate each
+                # folded chunk on its production watermark too.
+                extra_gate=local if not local.complete else None,
+            )
             out.merge_content(src_buf.content | local.content)
             return out
 
         return self.sim.process(proc())
 
-    def _reduce_2d(self, node, target_id, source_ids, size, ready_events) -> Event:
+    def _reduce_2d(
+        self, node, target_id, source_ids, size, ready_events,
+        result_buf: Optional[SimBuffer] = None,
+    ) -> Event:
         """2-D chain: sqrt(n) random groups, one sub-coordinator per group
         (the first-ready node of the group), then a top-level chain over
-        the group results in completion order (section 4.3)."""
+        the group results (section 4.3).
+
+        FUSED (section 4.4 composition): the top chain admits a group at
+        its FIRST reduced byte, not its completion -- group partials are
+        created eagerly and stream into the top chain as producing
+        sources, so the two levels overlap to one pipeline fill."""
 
         def proc():
             yield self.sim.timeout(self.spec.dir_latency)
@@ -632,13 +672,18 @@ class Hoplite:
                 # sub-chain's own hop order).
                 coord = group[0][1]
                 sub_results[sub_id] = coord
-                ev = self.reduce(
-                    coord, sub_id, dict(group), size, ready_events, _top=False
+                sub_buf = self.c.new_buffer(coord, sub_id, size)
+                self.reduce(
+                    coord, sub_id, dict(group), size, ready_events,
+                    _top=False, _result_buf=sub_buf,
                 )
-                sub_ready[sub_id] = ev
-            # Top-level chain over group results, ordered by completion.
+                # Feasibility transition, not completion: one byte of the
+                # group partial is enough for the top chain to chain off.
+                sub_ready[sub_id] = sub_buf.wait_bytes(1)
+            # Top-level chain over group results, ordered by first byte.
             result = yield self._reduce_chain(
-                node, target_id, sub_results, size, sub_ready
+                node, target_id, sub_results, size, sub_ready,
+                result_buf=result_buf,
             )
             return result
 
@@ -649,12 +694,30 @@ class Hoplite:
     def allreduce(
         self, nodes: Sequence[int], source_ids: Dict[str, int], target_id: str, size: int
     ) -> Event:
-        """Reduce to nodes[0] then broadcast: receivers stream the (possibly
-        still partial) result -- reduce and broadcast pipeline end to end."""
+        """Fused allreduce: receivers chase the producing reduce target's
+        watermark while the root is still reducing into it, so completion
+        is the reduce plus one broadcast pipeline fill.  The fuse/serialize
+        decision comes from ``planner.allreduce_policy`` -- the SAME policy
+        the threaded ``LocalCluster.allreduce`` applies."""
         root = nodes[0]
+        policy = allreduce_policy(
+            len(nodes), self.spec.link, size,
+            chunk=float(self.spec.chunks_for(size)[1]),
+        )
         red = self.reduce(root, target_id, source_ids, size)
-        gets = [self.get(n, target_id, to_executor=False) for n in nodes if n != root]
-        return self.sim.all_of([red] + gets)
+        if policy.fused:
+            gets = [self.get(n, target_id, to_executor=False) for n in nodes if n != root]
+            return self.sim.all_of([red] + gets)
+        # Sequential composition (small/latency-bound objects): broadcast
+        # only after the reduce completes.
+        done = self.sim.event()
+
+        def after(_e):
+            gets = [self.get(n, target_id, to_executor=False) for n in nodes if n != root]
+            self.sim.all_of(gets).add_waiter(lambda _e2: done.succeed())
+
+        red.add_waiter(after)
+        return done
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,16 @@ class DataPlaneStats:
         asserts the origin serves O(out-degree) copies, not O(N)
       * ``peak_outbound`` -- node -> max concurrent outbound transfers
         observed (must stay within the broadcast policy's out-degree cap)
+
+    And for the pipelined reduce plane:
+
+      * ``bytes_reduced`` -- node -> bytes that went through a streaming
+        reduction op AT that node (hop folds + chain finalization); the
+        allreduce benchmark asserts the 2-D plan spreads these evenly
+      * ``reduce_hops``   -- node -> streaming reduction executions at
+        that node (asserted <= ceil(n/sqrt(n)) per node in the 2-D plan)
+      * ``resplices``     -- mid-chain failure recoveries that resumed a
+        reduce from the predecessor watermark instead of restarting
     """
 
     __slots__ = (
@@ -62,9 +72,14 @@ class DataPlaneStats:
         "notified_waiters",
         "dir_wakeups",
         "windows",
+        "resplices",
         "bytes_served",
         "peak_outbound",
+        "bytes_reduced",
+        "reduce_hops",
     )
+
+    _DICT_FIELDS = ("bytes_served", "peak_outbound", "bytes_reduced", "reduce_hops")
 
     def __init__(self):
         self.wakeups = 0
@@ -72,8 +87,11 @@ class DataPlaneStats:
         self.notified_waiters = 0
         self.dir_wakeups = 0
         self.windows = 0
+        self.resplices = 0
         self.bytes_served: Dict[int, int] = {}
         self.peak_outbound: Dict[int, int] = {}
+        self.bytes_reduced: Dict[int, int] = {}
+        self.reduce_hops: Dict[int, int] = {}
 
     def note_bytes_served(self, node: int, nbytes: int) -> None:
         self.bytes_served[node] = self.bytes_served.get(node, 0) + nbytes
@@ -82,10 +100,16 @@ class DataPlaneStats:
         if concurrent > self.peak_outbound.get(node, 0):
             self.peak_outbound[node] = concurrent
 
+    def note_bytes_reduced(self, node: int, nbytes: int) -> None:
+        self.bytes_reduced[node] = self.bytes_reduced.get(node, 0) + nbytes
+
+    def note_reduce_hop(self, node: int) -> None:
+        self.reduce_hops[node] = self.reduce_hops.get(node, 0) + 1
+
     def as_dict(self) -> Dict[str, object]:
-        out = {k: getattr(self, k) for k in self.__slots__ if k not in ("bytes_served", "peak_outbound")}
-        out["bytes_served"] = dict(self.bytes_served)
-        out["peak_outbound"] = dict(self.peak_outbound)
+        out = {k: getattr(self, k) for k in self.__slots__ if k not in self._DICT_FIELDS}
+        for k in self._DICT_FIELDS:
+            out[k] = dict(getattr(self, k))
         return out
 
 

@@ -1,0 +1,417 @@
+"""Fused pipelined allreduce: watermark-streaming reduce chains, the
+producing-partial directory semantics behind them, and mid-chain failure
+re-splice (suffix-only recovery from the predecessor watermark)."""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import ObjectLost, Progress
+from repro.core.directory import ObjectDirectory
+from repro.core.local import LocalCluster
+from repro.core.planner import (
+    EC2_LINK,
+    allreduce_policy,
+    t_fused_allreduce,
+    t_sequential_allreduce,
+)
+
+
+# ---------------------------------------------------------------------------
+# policy (planner, shared by simulator and LocalCluster)
+# ---------------------------------------------------------------------------
+
+
+def test_allreduce_policy_fuses_large_not_small():
+    big = allreduce_policy(8, EC2_LINK, 64 << 20, chunk=4096)
+    assert big.fused
+    assert big.t_fused < big.t_sequential
+    # Inline-able objects have no partial copy to chase: never fused.
+    small = allreduce_policy(8, EC2_LINK, 1 << 10, chunk=1 << 10)
+    assert not small.fused
+    assert allreduce_policy(1, EC2_LINK, 64 << 20).fused is False
+
+
+def test_fused_bound_is_one_pipeline_fill_past_reduce():
+    S, chunk = 64 << 20, 4096
+    for n in (4, 8, 16):
+        t_f = t_fused_allreduce(n, EC2_LINK, S, chunk)
+        t_s = t_sequential_allreduce(n, EC2_LINK, S, chunk)
+        # Fusing hides the broadcast behind the reduce: the gap to the
+        # sequential composition is at least most of one S/B.
+        assert t_s - t_f > 0.5 * S / EC2_LINK.bandwidth
+
+
+# ---------------------------------------------------------------------------
+# directory: producing-partial semantics
+# ---------------------------------------------------------------------------
+
+
+def test_publish_partial_producing_sticky_and_watermark_kept():
+    d = ObjectDirectory()
+    d.publish_partial("t", node=0, size=100, producing=True)
+    (loc,) = d.locations("t")
+    assert loc.producing and loc.progress is Progress.PARTIAL
+    d.update_progress("t", 0, 40)
+    d.publish_partial("t", node=0, size=100)  # re-publish must not reset
+    (loc,) = d.locations("t")
+    assert loc.producing and loc.bytes_present == 40
+
+
+def test_charge_source_release_is_epoch_safe():
+    d = ObjectDirectory()
+    d.publish_complete("x", node=3, size=100)
+    epoch = d.charge_source("x", 3)
+    assert d.outbound_load(3) == 1
+    d.reset_outbound(3)  # node failed/restarted mid-hop
+    assert d.outbound_load(3) == 0
+    d.release_source("x", 3, epoch)  # the dead hop's late release
+    assert d.outbound_load(3) == 0, "stale hop release went negative/freed a slot"
+
+
+def test_get_chases_producing_target_not_stuck_cohort():
+    """A receiver at the watermark frontier of a producing partial must
+    WAIT for the producer (the reduce is still running), not collapse the
+    cohort to ObjectLost -- and must complete once production finishes."""
+    c = LocalCluster(2, chunk_size=16 * 1024)
+    n = 40_000
+    dtype, shape = np.dtype(np.float64), (n,)
+    payload = np.random.RandomState(0).rand(n)
+    raw = payload.view(np.uint8)
+    with c._dir_lock:
+        c.meta["t"] = (dtype, shape)
+        buf = c.stores[0].create("t", raw.size, pinned=True, chunk_size=16 * 1024)
+        c.directory.publish_partial("t", 0, raw.size, producing=True)
+    half = (raw.size // 2) - (raw.size // 2) % 64
+    buf.write_chunk(0, raw[:half])
+    with c._dir_lock:
+        c.directory.update_progress("t", 0, half)
+    f = c.get_async(1, "t", timeout=30.0)
+    time.sleep(0.3)  # receiver reaches the frontier and must keep waiting
+    assert not f.done(), "receiver gave up on a producing partial"
+    buf.write_chunk(half, raw[half:])
+    with c._dir_lock:
+        c.directory.publish_complete("t", 0, raw.size)
+    np.testing.assert_array_equal(f.result(timeout=30.0), payload)
+
+
+# ---------------------------------------------------------------------------
+# threaded cluster: fusion
+# ---------------------------------------------------------------------------
+
+
+def test_fused_allreduce_correct_all_nodes():
+    c = LocalCluster(8)
+    vals = [np.random.RandomState(i).rand(30_000) for i in range(8)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    c.allreduce(list(range(8)), "ar", [f"g{i}" for i in range(8)], timeout=60.0)
+    for i in range(8):
+        np.testing.assert_allclose(c.get(i, "ar"), sum(vals), rtol=1e-12)
+
+
+def test_fused_allreduce_receivers_start_before_reduce_completes():
+    """On a paced plane, receivers must hold bytes of the target while the
+    root's reduce is still producing -- the fusion itself."""
+    c = LocalCluster(4, chunk_size=64 * 1024, pace=0.003)
+    vals = [np.random.RandomState(i).rand(64_000) for i in range(4)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    from concurrent.futures import Future
+    import threading
+
+    done: Future = Future()
+
+    def run():
+        try:
+            done.set_result(
+                c.allreduce(list(range(4)), "ar", [f"g{i}" for i in range(4)], timeout=60.0)
+            )
+        except BaseException as e:  # noqa: BLE001
+            done.set_exception(e)
+
+    threading.Thread(target=run, daemon=True).start()
+    overlapped = False
+    deadline = time.time() + 30.0
+    while time.time() < deadline and not done.done():
+        root = c.stores[0].get("ar")
+        if root is not None and 0 < root.bytes_present < root.size:
+            if any(
+                (b := c.stores[i].get("ar")) is not None and b.bytes_present > 0
+                for i in range(1, 4)
+            ):
+                overlapped = True
+                break
+        time.sleep(0.001)
+    done.result(timeout=60.0)
+    assert overlapped, "no receiver held bytes while the reduce was producing"
+    for i in range(4):
+        np.testing.assert_allclose(c.get(i, "ar"), sum(vals), rtol=1e-12)
+
+
+def test_re_reduce_into_existing_target_raises_not_stale():
+    """Objects are immutable once complete: reducing into an id that
+    already holds a complete result must raise ObjectAlreadyExists (as
+    the old put_array path did), never silently re-publish the first
+    reduce's bytes as the second's result (review regression)."""
+    from repro.core.api import ObjectAlreadyExists
+
+    c = LocalCluster(4)
+    a = [np.random.RandomState(i).rand(20_000) for i in range(2)]
+    b = [np.random.RandomState(10 + i).rand(20_000) for i in range(2)]
+    for i, v in enumerate(a):
+        c.put(i, f"a{i}", v)
+    for i, v in enumerate(b):
+        c.put(i + 2, f"b{i}", v)
+    c.reduce(0, "t", ["a0", "a1"], timeout=30.0)
+    with pytest.raises(ObjectAlreadyExists):
+        c.reduce(0, "t", ["b0", "b1"], timeout=30.0)
+    np.testing.assert_allclose(c.get(0, "t"), sum(a), rtol=1e-12)
+    # After an explicit Delete the id is reusable.
+    c.delete("t")
+    c.reduce(0, "t", ["b0", "b1"], timeout=30.0)
+    np.testing.assert_allclose(c.get(0, "t"), sum(b), rtol=1e-12)
+
+
+def test_reduce_single_directory_metadata_wait(monkeypatch):
+    """Satellite regression: one `_wait_any_meta` subscription round-trip
+    per reduce (it used to run once in reduce() and again in
+    _reduce_chain_blocking)."""
+    c = LocalCluster(4)
+    vals = [np.random.RandomState(i).rand(20_000) for i in range(4)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    calls = []
+    orig = LocalCluster._wait_any_meta
+
+    def counting(self, source_ids, deadline):
+        calls.append(list(source_ids))
+        return orig(self, source_ids, deadline)
+
+    monkeypatch.setattr(LocalCluster, "_wait_any_meta", counting)
+    c.reduce(0, "sum", [f"g{i}" for i in range(4)], timeout=30.0)
+    np.testing.assert_allclose(c.get(0, "sum"), sum(vals), rtol=1e-12)
+    assert len(calls) == 1, f"metadata resolved {len(calls)} times: {calls}"
+
+
+def test_2d_top_chain_streams_from_group_partials():
+    """2-D regime on a paced plane: the reduce must complete in roughly
+    one pipeline (groups overlap the top chain), and the result is exact.
+    Structural check: the top chain consumed producing partials (group
+    sub-targets were admitted before completion) -- observable as the
+    whole 2-D reduce finishing and every hop node doing <= ceil(sqrt n)
+    hop reductions."""
+    n = 9
+    c = LocalCluster(n + 1, chunk_size=32 * 1024, pace=0.001)
+    elems = 40_000  # 320 KB -> n*B*L > S: 2-D split
+    vals = [np.random.RandomState(i).rand(elems) for i in range(n)]
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"g{i}", v)
+    c.reduce(0, "sum", [f"g{i}" for i in range(n)], timeout=60.0)
+    np.testing.assert_allclose(c.get(0, "sum"), sum(vals), rtol=1e-12)
+    hops = c.stats["reduce_hops"]
+    cap = math.ceil(n / math.sqrt(n))
+    assert max(hops.values(), default=0) <= cap, hops
+
+
+# ---------------------------------------------------------------------------
+# re-splice: mid-chain participant kill
+# ---------------------------------------------------------------------------
+
+
+def _chain_cluster(num_nodes, elems, victim_src, dup_node):
+    """An n-node cluster with sources g0..g_{k-1} at nodes 1..k (receiver
+    0 holds none), sized so the planner picks a 1-D chain, plus a second
+    complete copy of the victim's source at ``dup_node`` so its
+    contribution survives the kill."""
+    c = LocalCluster(num_nodes, chunk_size=32 * 1024, pace=0.002)
+    k = num_nodes - 2  # last node is the spare holding the duplicate
+    vals = [np.random.RandomState(100 + i).rand(elems) for i in range(k)]
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"g{i}", v)
+    c.put(dup_node, f"g{victim_src}", vals[victim_src])  # identical bytes
+    return c, vals, [f"g{i}" for i in range(k)]
+
+
+def test_mid_chain_kill_resplices_byte_equal():
+    """Kill a chain participant while the next hop streams its partial:
+    the chain must re-splice at the predecessor's watermark (suffix-only
+    recovery, no subtree restart), finish in < 2 s, and produce bytes
+    IDENTICAL to the no-failure run (same fold association)."""
+    elems = 100_000  # 800 KB, 4 sources -> 1-D chain (n*B*L < S)
+    # Reference run: no failure.
+    c_ref, vals, srcs = _chain_cluster(6, elems, victim_src=1, dup_node=5)
+    c_ref.reduce(0, "sum", srcs, timeout=60.0)
+    ref = c_ref.get(0, "sum", timeout=30.0)
+
+    # Failure run: kill node 2 (holder of g1 and of the hop that folds
+    # g0+g1) while node 3's hop chases its output.
+    c, vals2, srcs2 = _chain_cluster(6, elems, victim_src=1, dup_node=5)
+    from concurrent.futures import Future
+    import threading
+
+    fut: Future = Future()
+
+    def run():
+        try:
+            c.reduce(0, "sum", srcs2, timeout=60.0)
+            fut.set_result(c.get(0, "sum", timeout=30.0))
+        except BaseException as e:  # noqa: BLE001
+            fut.set_exception(e)
+
+    threading.Thread(target=run, daemon=True).start()
+    # Wait until node 3's hop output exists and is mid-stream.
+    deadline = time.time() + 20.0
+    killed = False
+    while time.time() < deadline:
+        for oid, buf in list(c.stores[3].objects.items()):
+            if "-hop" in oid and 0 < buf.bytes_present < buf.size:
+                t0 = time.time()
+                c.fail_node(2)
+                killed = True
+                break
+        if killed:
+            break
+        time.sleep(0.0005)
+    assert killed, "never caught the downstream hop mid-stream"
+    got = fut.result(timeout=30.0)
+    assert time.time() - t0 < 2.0, "re-splice rode a timeout instead of an event"
+    assert c.stats["resplices"] >= 1, "recovered without re-splicing (restart?)"
+    np.testing.assert_array_equal(got, ref)  # byte-identical, not just close
+
+
+def test_tail_kill_resplices_final_fold():
+    """Kill the chain TAIL while the receiver's final fold streams from
+    it: the finalization re-splices from the target's own watermark and
+    the result is byte-identical to the no-failure run."""
+    elems = 100_000
+    c_ref, _vals, srcs = _chain_cluster(6, elems, victim_src=3, dup_node=5)
+    c_ref.reduce(0, "sum", srcs, timeout=60.0)
+    ref = c_ref.get(0, "sum", timeout=30.0)
+
+    c, _v, srcs2 = _chain_cluster(6, elems, victim_src=3, dup_node=5)
+    from concurrent.futures import Future
+    import threading
+
+    fut: Future = Future()
+
+    def run():
+        try:
+            c.reduce(0, "sum", srcs2, timeout=60.0)
+            fut.set_result(c.get(0, "sum", timeout=30.0))
+        except BaseException as e:  # noqa: BLE001
+            fut.set_exception(e)
+
+    threading.Thread(target=run, daemon=True).start()
+    # The tail is the last hop's node (node 4 holds g3, the last source):
+    # kill it once the receiver's target buffer is mid-fold.
+    deadline = time.time() + 20.0
+    killed = False
+    while time.time() < deadline:
+        tgt = c.stores[0].get("sum")
+        if tgt is not None and 0 < tgt.bytes_present < tgt.size:
+            t0 = time.time()
+            c.fail_node(4)
+            killed = True
+            break
+        time.sleep(0.0005)
+    assert killed, "never caught the final fold mid-stream"
+    got = fut.result(timeout=30.0)
+    assert time.time() - t0 < 2.0
+    assert c.stats["resplices"] >= 1
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_hop_failure_before_output_creation_wakes_consumers():
+    """A hop that dies BEFORE creating its output buffer (its local
+    operand vanished) must still mark the output lost -- a consumer
+    waiting for the output to appear has no other event coming and would
+    otherwise ride its full deadline (review regression)."""
+    from repro.core.scheduler import Hop
+
+    c = LocalCluster(3)
+    c.put(1, "src", np.random.RandomState(0).rand(30_000))
+    # dst_object never existed at node 2: the hop fails in its attempt.
+    hop = Hop(1, "src", 2, "missing-local", "t-hop1-missing-local")
+    fut = c._exec_hop_async(
+        hop, np.float64, (30_000,), lambda a, b: a + b,
+        deadline=time.time() + 30.0, lineage={},
+    )
+    with pytest.raises(ObjectLost):
+        fut.result(timeout=10.0)
+    t0 = time.time()
+    with pytest.raises(ObjectLost):
+        # A consumer examining the output must observe the loss NOW.
+        c._await_directory(
+            [hop.out_object],
+            lambda: (_ for _ in ()).throw(ObjectLost(hop.out_object))
+            if c._object_lost(hop.out_object)
+            else None,
+            deadline=time.time() + 30.0,
+        )
+    assert time.time() - t0 < 2.0, "consumer rode the deadline"
+
+
+def test_group_failure_before_advertise_fails_top_chain_promptly(monkeypatch):
+    """A 2-D group that fails BEFORE advertising its sub-target (its
+    coordinator died first) leaves no location, meta, or tombstone -- the
+    top chain must still observe the loss promptly via the group-future
+    callback, not ride its deadline (review regression)."""
+    c = LocalCluster(6)
+    vals = [np.random.RandomState(i).rand(12_500) for i in range(5)]  # 100 KB -> 2-D
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"g{i}", v)
+    orig = LocalCluster._reduce_chain_blocking
+
+    def sabotage(self, node, target_id, source_ids, op, deadline, meta=None):
+        if "/g" in target_id:
+            # The group dies before _advertise_reduce_target runs.
+            raise ObjectLost(f"sabotaged-{target_id}")
+        return orig(self, node, target_id, source_ids, op, deadline, meta=meta)
+
+    monkeypatch.setattr(LocalCluster, "_reduce_chain_blocking", sabotage)
+    t0 = time.time()
+    with pytest.raises(ObjectLost):
+        c.reduce(0, "sum", [f"g{i}" for i in range(5)], timeout=30.0)
+    assert time.time() - t0 < 2.0, "top chain rode the deadline"
+
+
+def test_kill_without_surviving_copy_still_fails_promptly():
+    """When the killed participant's source has NO other copy, re-splice
+    must conclude ObjectLost promptly (framework recovery owns it), not
+    hang hunting for a replacement."""
+    c = LocalCluster(5, chunk_size=32 * 1024, pace=0.002)
+    vals = [np.random.RandomState(i).rand(100_000) for i in range(4)]
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"g{i}", v)
+    from concurrent.futures import Future
+    import threading
+
+    fut: Future = Future()
+
+    def run():
+        try:
+            fut.set_result(c.reduce(0, "sum", [f"g{i}" for i in range(4)], timeout=30.0))
+        except BaseException as e:  # noqa: BLE001
+            fut.set_exception(e)
+
+    threading.Thread(target=run, daemon=True).start()
+    deadline = time.time() + 20.0
+    killed = False
+    while time.time() < deadline:
+        if any(
+            "-hop" in oid and buf.bytes_present > 0
+            for s in c.stores
+            for oid, buf in list(s.objects.items())
+        ):
+            t0 = time.time()
+            c.fail_node(2)
+            killed = True
+            break
+        time.sleep(0.0005)
+    assert killed
+    with pytest.raises((ObjectLost, Exception)):
+        fut.result(timeout=15.0)
+    assert time.time() - t0 < 5.0, "loss detection rode the deadline"
