@@ -86,6 +86,10 @@ class ObjectDirectory:
         # (and cleared) when the node frees a slot.  Targeted registry so
         # release_source never has to scan the subscriber tables.
         self._cap_blocked: Dict[int, set] = {}
+        # Optional core.trace.FlightRecorder, attached by the owning
+        # cluster (never by replicas -- mirrored mutations must not
+        # double-record).  Checked as `enabled` before any event cost.
+        self.recorder = None
 
     # -- internal ----------------------------------------------------------
 
@@ -213,17 +217,30 @@ class ObjectDirectory:
             max_out_degree=max_out_degree,
             tick=self._tick,
         )
+        rec = self.recorder
         if chosen is not None:
             self._outbound[chosen.node] += 1
             shard.sends[object_id][chosen.node] = served.get(chosen.node, 0) + 1
+            if rec is not None and rec.enabled:
+                rec.instant(
+                    "directory", "select-source", chosen.node, object_id,
+                    load=self._outbound[chosen.node], min_lead=min_lead,
+                )
         elif max_out_degree is not None:
             # Turned away by the cap, not by feasibility: register
             # interest on every feasible holder so the next freed slot on
             # any of them wakes this object's waiters (targeted -- no
             # subscriber-table scans at release time).
+            turned_away = False
             for l in candidates:
                 if l.progress is Progress.COMPLETE or l.bytes_present > min_lead:
                     self._cap_blocked.setdefault(l.node, set()).add(object_id)
+                    turned_away = True
+            if turned_away and rec is not None and rec.enabled:
+                rec.instant(
+                    "directory", "cap-blocked", exclude if exclude is not None else -1,
+                    object_id, max_out_degree=max_out_degree,
+                )
         return chosen
 
     def release_source(self, object_id: str, node: int, epoch: Optional[int] = None) -> None:
@@ -242,6 +259,12 @@ class ObjectDirectory:
         if epoch is None or epoch == self._node_epoch.get(node, 0):
             if self._outbound.get(node, 0) > 0:
                 self._outbound[node] -= 1
+        rec = self.recorder
+        if rec is not None and rec.enabled:
+            rec.instant(
+                "directory", "release-source", node, object_id,
+                load=self._outbound.get(node, 0),
+            )
         self._notify(self._shard(object_id), object_id)
         for oid in self._cap_blocked.pop(node, ()):
             if oid != object_id:

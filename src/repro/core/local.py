@@ -81,6 +81,19 @@ from repro.core.planner import (
 )
 from repro.core.scheduler import ChainState, partition_groups
 from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore
+from repro.core.trace import (
+    CAT_CHAIN,
+    CAT_FETCH,
+    CAT_STREAM,
+    FlightRecorder,
+    STAGE_CAP_BLOCKED,
+    STAGE_PLAN,
+    STAGE_PRODUCER_WAIT,
+    STAGE_REPLAN,
+    STAGE_RESPLICE,
+    STAGE_STREAMING,
+    StageClock,
+)
 
 
 class DeadNode(RuntimeError):
@@ -130,6 +143,7 @@ class LocalCluster:
         store_capacity: Optional[int] = None,
         max_out_degree: Optional[int] = None,  # None -> broadcast policy
         stall_timeout: float = 2 * _WATERMARK_RECHECK_S,
+        trace: bool = False,
     ):
         self.num_nodes = num_nodes
         # ``chunk_size=None`` autotunes per object via the Appendix-A cost
@@ -151,6 +165,12 @@ class LocalCluster:
         self.stall_timeout = stall_timeout
         self.directory = ReplicatedDirectory(num_replicas=directory_replicas)
         self._stats = DataPlaneStats()
+        # Flight recorder (core/trace): always constructed so call sites
+        # stay unconditional; a disabled recorder costs one bool check.
+        # Replicas never get the recorder -- mirrored mutations must not
+        # double-record directory events.
+        self.trace = FlightRecorder(enabled=trace)
+        self.directory.recorder = self.trace
         self.stores = [
             NodeStore(i, store_capacity, stats=self._stats) for i in range(num_nodes)
         ]
@@ -177,8 +197,23 @@ class LocalCluster:
 
     @property
     def stats(self) -> Dict[str, object]:
-        """Data-plane contention counters (see store.DataPlaneStats)."""
+        """Data-plane contention counters (see store.DataPlaneStats),
+        including critical-path ``stage_seconds`` attribution."""
         return self._stats.as_dict()
+
+    def reset_stats(self) -> Dict[str, object]:
+        """Snapshot-then-zero the counters (benchmark scenario hygiene:
+        per-scenario deltas must not bleed across a cluster's lifetime).
+        Returns the pre-reset snapshot."""
+        snap = self._stats.snapshot()
+        self._stats.reset()
+        return snap
+
+    def dump_trace(self, path: str) -> int:
+        """Write the flight recorder's events as Chrome-trace JSON
+        (openable in chrome://tracing or https://ui.perfetto.dev).
+        Returns the number of exported events."""
+        return self.trace.dump_chrome_trace(path)
 
     def chunk_size_for(self, nbytes: int) -> int:
         """Chunk size for one object: the explicit override when given,
@@ -344,12 +379,21 @@ class LocalCluster:
         destination watermark instead of restarting."""
         key = (node, object_id)
         owns_stream = [False]
+        # Critical-path attribution: this fetch partitions its own wall
+        # time into stages.  After a failed leg, planning time and waits
+        # classify as "replan" until the next leg starts streaming.
+        sc = StageClock(self._stats, self.trace, node, object_id)
+        replanning = [False]
+
+        def wait_stage(stage: str) -> None:
+            sc.switch(STAGE_REPLAN if replanning[0] else stage)
 
         def attempt():
             """Plan one transfer leg; None -> wait for a directory event
             (publication, watermark advance past ours, or a freed
             outbound slot).  Returns ("done", buf) when a sibling fetch
             completed our copy, else ("xfer", loc, size, src_buf, dst_buf)."""
+            wait_stage(STAGE_PLAN)
             if node in self.dead:
                 # The receiver itself was killed mid-protocol: abort
                 # instead of re-advertising a partial at a dead node.
@@ -363,6 +407,7 @@ class LocalCluster:
                     # into this node: wait for it instead of opening a
                     # duplicate inbound stream (its completion, failure,
                     # or abandonment all fire directory events).
+                    wait_stage(STAGE_PRODUCER_WAIT)
                     return None
                 progress = mine.bytes_present if mine is not None else 0
                 self._refresh_watermarks(object_id)
@@ -370,6 +415,7 @@ class LocalCluster:
                 if size is None:
                     if not self.directory.available_elsewhere(object_id, node):
                         raise ObjectLost(object_id)
+                    wait_stage(STAGE_PRODUCER_WAIT)
                     return None  # partial advertised without size yet
                 loc = self.directory.select_source(
                     object_id,
@@ -409,6 +455,21 @@ class LocalCluster:
                                 frontier = max(l.bytes_present for l in locs)
                                 if progress >= frontier:
                                     raise ObjectLost(object_id)
+                    # Classify the wait: feasible-but-capped holders mean
+                    # the cap is the bottleneck ("cap-blocked"); no copy
+                    # leading our watermark means we wait on a producer.
+                    feasible = any(
+                        l.node != node
+                        and l.node not in self.dead
+                        and (
+                            l.progress is Progress.COMPLETE
+                            or l.bytes_present > progress
+                        )
+                        for l in self.directory.locations(object_id)
+                    )
+                    wait_stage(
+                        STAGE_CAP_BLOCKED if feasible else STAGE_PRODUCER_WAIT
+                    )
                     return None  # all feasible sources busy/behind: wait
                 src_buf = self.stores[loc.node].get(object_id)
                 if src_buf is None or src_buf.failed:
@@ -438,6 +499,13 @@ class LocalCluster:
                     loc.node, self.directory.outbound_load(loc.node)
                 )
                 epoch = self.directory.charge_epoch(loc.node)
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_FETCH,
+                        "replan-leg" if replanning[0] else "plan-leg",
+                        node, object_id, src=loc.node, resume_from=dst_buf.bytes_present,
+                    )
+                replanning[0] = False
                 return ("xfer", loc, size, src_buf, dst_buf, epoch)
 
         try:
@@ -465,8 +533,16 @@ class LocalCluster:
                         object_id,
                         start=dst_buf.bytes_present,
                         publish_progress=True,
+                        stage=sc,
                     )
                 except DeadNode as e:
+                    replanning[0] = True
+                    sc.switch(STAGE_REPLAN)
+                    if self.trace.enabled:
+                        self.trace.instant(
+                            CAT_FETCH, "replan", node, object_id,
+                            reason="dead-node", src=loc.node,
+                        )
                     with self._dir_lock:
                         self.directory.release_source(object_id, loc.node, epoch)
                         if e.node_id != loc.node:
@@ -481,6 +557,13 @@ class LocalCluster:
                 except StaleBuffer:
                     # The sender's copy was abandoned/restarted away, but its
                     # node is alive: invalidate that single location and retry.
+                    replanning[0] = True
+                    sc.switch(STAGE_REPLAN)
+                    if self.trace.enabled:
+                        self.trace.instant(
+                            CAT_FETCH, "replan", node, object_id,
+                            reason="stale-buffer", src=loc.node,
+                        )
                     with self._dir_lock:
                         self.directory.release_source(object_id, loc.node, epoch)
                         self.directory.drop_location(object_id, loc.node)
@@ -489,6 +572,13 @@ class LocalCluster:
                 except SourceStalled:
                     # Source watermark wedged but other copies exist: free
                     # the slot and re-plan (resuming, not restarting).
+                    replanning[0] = True
+                    sc.switch(STAGE_REPLAN)
+                    if self.trace.enabled:
+                        self.trace.instant(
+                            CAT_FETCH, "replan", node, object_id,
+                            reason="source-stalled", src=loc.node,
+                        )
                     with self._dir_lock:
                         self.directory.release_source(object_id, loc.node, epoch)
                     continue
@@ -508,6 +598,7 @@ class LocalCluster:
                     self.directory.publish_complete(object_id, node, size)
                 return dst_buf
         finally:
+            sc.close()
             if owns_stream[0]:
                 with self._dir_lock:
                     self._fetching.discard(key)
@@ -577,6 +668,7 @@ class LocalCluster:
         object_id: str,
         start: int = 0,
         publish_progress: bool = False,
+        stage: Optional[StageClock] = None,
     ):
         """Windowed zero-copy pipelined copy gated on source progress.
 
@@ -602,6 +694,11 @@ class LocalCluster:
 
         Raises SourceStalled when the source watermark stops advancing
         for ``stall_timeout`` while the directory knows another copy.
+
+        ``stage`` is the caller's critical-path clock: time blocked on the
+        source watermark classifies as ``producer-wait``, time moving
+        bytes as ``streaming``.  With tracing enabled the whole leg is
+        recorded as one ``stream`` span (never per window).
         """
         pos = start
         total = src_buf.size
@@ -609,8 +706,11 @@ class LocalCluster:
         window_cap += (-window_cap) % 64  # keep watermarks element-aligned
         last_advance = time.time()
         served = 0  # flushed to the shared counters once, in finally
+        leg_t0 = self.trace.clock() if self.trace.enabled else None
         try:
             while pos < total:
+                if stage is not None and src_buf.bytes_present <= pos:
+                    stage.switch(STAGE_PRODUCER_WAIT)
                 avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
                 if src in self.dead:
                     raise DeadNode(str(src))
@@ -628,9 +728,16 @@ class LocalCluster:
                                 for l in self.directory.locations(object_id)
                             )
                         if elsewhere:
+                            if self.trace.enabled:
+                                self.trace.instant(
+                                    CAT_STREAM, "watermark-stall", dst,
+                                    object_id, src=src, at=pos,
+                                )
                             raise SourceStalled(f"{object_id}@{src}")
                     continue
                 last_advance = time.time()
+                if stage is not None:
+                    stage.switch(STAGE_STREAMING)
                 if self.pace:
                     avail = min(avail, pos + src_buf.chunk_size)
                     time.sleep(self.pace)
@@ -655,6 +762,12 @@ class LocalCluster:
                 with self._stats_lock:
                     self._stats.note_bytes_served(src, served)
                     self.bytes_sent_per_node[src] += served
+            if leg_t0 is not None:
+                self.trace.span(
+                    CAT_STREAM, "copy-leg", dst,
+                    leg_t0, self.trace.clock() - leg_t0,
+                    object_id, src=src, bytes=served, resume_from=start,
+                )
         with self._stats_lock:
             self.transfers.append((src, dst, object_id))
 
@@ -1071,6 +1184,7 @@ class LocalCluster:
         recomputed."""
         size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
         final = chain.final_hop(target_id + "#in")
+        sc = StageClock(self._stats, self.trace, node, target_id)
         with self._dir_lock:
             self._check_alive(node)
             if self.directory.is_deleted(target_id):
@@ -1100,7 +1214,8 @@ class LocalCluster:
 
         if final is not None:
             src_node, src_buf = self._resolve_tail(final, node, chain.lineage,
-                                                   dtype, shape, op, deadline)
+                                                   dtype, shape, op, deadline,
+                                                   stage=sc)
         else:
             src_node, src_buf = None, None
         need_rebuild = False
@@ -1110,6 +1225,12 @@ class LocalCluster:
                 # resumes from the target's own watermark below, with a
                 # replacement rebuilt from still-live copies.
                 self._stats.resplices += 1
+                sc.switch(STAGE_RESPLICE)
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_CHAIN, "resplice", node, target_id,
+                        rebuilt=final.src_object, at=out.bytes_present,
+                    )
                 src_node, src_buf = node, self._rebuild_partial(
                     node, final.src_object, chain.lineage, dtype, shape, op, deadline
                 )
@@ -1131,7 +1252,7 @@ class LocalCluster:
                 self._stream_fold(
                     node, inputs, out, dtype, op, deadline,
                     object_id=target_id, start=out.bytes_present,
-                    publish_progress=True,
+                    publish_progress=True, stage=sc,
                 )
                 break
             except DeadNode as e:
@@ -1146,6 +1267,7 @@ class LocalCluster:
                 if epoch is not None:
                     with self._dir_lock:
                         self.directory.release_source(final.src_object, src_node, epoch)
+        sc.close()
         # Hop futures are reaped leniently: the target's bytes are already
         # complete and correct, and a hop we re-spliced around legitimately
         # errored.  Genuine source loss surfaced through the fold above.
@@ -1168,7 +1290,8 @@ class LocalCluster:
             self.directory.publish_complete(target_id, node, size)
         return target_id
 
-    def _resolve_tail(self, final, node, lineage, dtype, shape, op, deadline):
+    def _resolve_tail(self, final, node, lineage, dtype, shape, op, deadline,
+                      stage: Optional[StageClock] = None):
         """Locate the chain tail's buffer for the final fold, waiting for
         the producing hop thread to create it (the hop-issue race), or
         rebuilding it locally when its node already died."""
@@ -1182,6 +1305,8 @@ class LocalCluster:
             if src_buf is None or src_buf.failed:
                 if self._object_lost(final.src_object):
                     return ("rebuild",)
+                if stage is not None:
+                    stage.switch(STAGE_PRODUCER_WAIT)
                 return None  # upstream hop has not created its output yet
             return ("ok", src_buf)
 
@@ -1191,6 +1316,13 @@ class LocalCluster:
         )
         if got[0] == "rebuild":
             self._stats.resplices += 1
+            if stage is not None:
+                stage.switch(STAGE_RESPLICE)
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_CHAIN, "resplice", node, final.src_object,
+                    rebuilt=final.src_object, at=0,
+                )
             return node, self._rebuild_partial(
                 node, final.src_object, lineage, dtype, shape, op, deadline
             )
@@ -1247,10 +1379,25 @@ class LocalCluster:
                 )
                 with self._stats_lock:
                     self._stats.note_reduce_hop(hop.dst_node)
+                sc = StageClock(
+                    self._stats, self.trace, hop.dst_node, hop.out_object
+                )
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_CHAIN, "hop-start", hop.dst_node, hop.out_object,
+                        src=hop.src_node, src_object=hop.src_object,
+                    )
                 src_node = hop.src_node
                 while True:
                     if need_rebuild:
                         self._stats.resplices += 1
+                        sc.switch(STAGE_RESPLICE)
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_CHAIN, "resplice", hop.dst_node,
+                                hop.out_object, rebuilt=hop.src_object,
+                                at=out.bytes_present,
+                            )
                         src_buf = self._rebuild_partial(
                             hop.dst_node, hop.src_object, lineage,
                             dtype, shape, op, deadline,
@@ -1280,6 +1427,7 @@ class LocalCluster:
                             deadline,
                             object_id=hop.out_object,
                             start=out.bytes_present,
+                            stage=sc,
                         )
                         break
                     except DeadNode as e:
@@ -1294,6 +1442,7 @@ class LocalCluster:
                                 self.directory.release_source(
                                     hop.src_object, src_node, epoch
                                 )
+                sc.close()
                 with self._dir_lock:
                     if hop.dst_node in self.dead:
                         raise ObjectLost(hop.out_object)
@@ -1324,6 +1473,7 @@ class LocalCluster:
         object_id: str = "",
         start: int = 0,
         publish_progress: bool = False,
+        stage: Optional[StageClock] = None,
     ):
         """out[w] = fold(op, inputs[0][w], inputs[1][w], ...) window-by-
         window, gated on EVERY input's watermark -- the streaming add of a
@@ -1347,10 +1497,15 @@ class LocalCluster:
         served: Dict[int, int] = {}
         reduced = 0
         first_pub = pos == 0
+        leg_t0 = self.trace.clock() if self.trace.enabled else None
         try:
             while pos < total:
                 if time.time() > deadline:
                     raise TimeoutError(f"reduce fold {object_id} timed out")
+                if stage is not None and any(
+                    buf.bytes_present <= pos for buf, _oid, _src in inputs
+                ):
+                    stage.switch(STAGE_PRODUCER_WAIT)
                 avail = total
                 for buf, oid, src in inputs:
                     got = buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
@@ -1366,6 +1521,8 @@ class LocalCluster:
                     avail = min(avail, got)
                 if avail <= pos:
                     continue
+                if stage is not None:
+                    stage.switch(STAGE_STREAMING)
                 if self.pace:
                     avail = min(avail, pos + out.chunk_size)
                     time.sleep(self.pace)
@@ -1401,6 +1558,13 @@ class LocalCluster:
                         self.bytes_sent_per_node[src] += nbytes
                     for src in served:
                         self.transfers.append((src, dst, object_id))
+            if leg_t0 is not None:
+                self.trace.span(
+                    CAT_CHAIN, "fold-leg", dst,
+                    leg_t0, self.trace.clock() - leg_t0,
+                    object_id, inputs=len(inputs), bytes_reduced=reduced,
+                    resume_from=start,
+                )
 
     def _rebuild_partial(
         self, node, object_id, lineage, dtype, shape, op, deadline

@@ -49,6 +49,7 @@ from repro.core.planner import (
     use_two_dimensional,
 )
 from repro.core.scheduler import ChainState, Hop, partition_groups
+from repro.core.trace import CAT_CHAIN, CAT_STREAM, FlightRecorder
 
 # ---------------------------------------------------------------------------
 # Event kernel (miniature SimPy)
@@ -247,12 +248,22 @@ class Node:
 class SimCluster:
     """Substrate shared by Hoplite and the baselines."""
 
-    def __init__(self, spec: ClusterSpec = ClusterSpec()):
+    def __init__(self, spec: ClusterSpec = ClusterSpec(), trace: bool = False):
         self.spec = spec
         self.sim = Simulator()
         self.nodes = [Node(self.sim, i) for i in range(spec.num_nodes)]
         self.directory = ObjectDirectory()
         self.bytes_on_wire = 0
+        # Same flight-recorder schema as the threaded plane, on simulated
+        # time: spans/instants carry ``sim.now`` so a simulated transfer
+        # storm opens in Perfetto exactly like a threaded one.
+        self.trace = FlightRecorder(enabled=trace, clock=lambda: self.sim.now)
+        self.directory.recorder = self.trace
+
+    def dump_trace(self, path: str) -> int:
+        """Write recorded events as Chrome-trace JSON (timestamps are
+        simulated seconds).  Returns the number of exported events."""
+        return self.trace.dump_chrome_trace(path)
 
     # -- data plane ----------------------------------------------------------
 
@@ -285,6 +296,7 @@ class SimCluster:
         self.bytes_on_wire += size
         done = self.sim.event()
         delivered = [0]
+        t0 = self.sim.now
 
         def deliver(k: int, upto: int):
             def after_ingress(_ev):
@@ -301,6 +313,13 @@ class SimCluster:
                     on_progress(dst_buf.bytes_present)
                 delivered[0] += 1
                 if delivered[0] == nchunks:
+                    if self.trace.enabled:
+                        self.trace.span(
+                            CAT_STREAM,
+                            "reduce-leg" if reduce_into else "copy-leg",
+                            dst, t0, self.sim.now - t0,
+                            dst_buf.object_id, src=src, bytes=size,
+                        )
                     done.succeed()
 
             self.nodes[dst].ingress.serve(
@@ -335,6 +354,7 @@ class SimCluster:
         nchunks, csize = spec.chunks_for(size)
         done = self.sim.event()
         finished = [0]
+        t0 = self.sim.now
 
         def driver():
             for k in range(nchunks):
@@ -347,6 +367,12 @@ class SimCluster:
                     on_progress(dst_buf.bytes_present)
                 finished[0] += 1
                 if finished[0] == nchunks:
+                    if self.trace.enabled:
+                        self.trace.span(
+                            CAT_STREAM, "mem-copy", node,
+                            t0, self.sim.now - t0,
+                            dst_buf.object_id, bytes=size,
+                        )
                     done.succeed()
 
         self.sim.process(driver())
@@ -631,6 +657,11 @@ class Hoplite:
         out = self.c.new_buffer(
             hop.dst_node, hop.out_object, size, src_buf.content | local.content
         )
+        if self.c.trace.enabled:
+            self.c.trace.instant(
+                CAT_CHAIN, "hop-start", hop.dst_node, hop.out_object,
+                src=hop.src_node, src_object=hop.src_object,
+            )
 
         def proc():
             yield self.sim.timeout(self.spec.link.latency)  # coordinator notify

@@ -64,6 +64,16 @@ class DataPlaneStats:
         that node (asserted <= ceil(n/sqrt(n)) per node in the 2-D plan)
       * ``resplices``     -- mid-chain failure recoveries that resumed a
         reduce from the predecessor watermark instead of restarting
+
+    And critical-path attribution (fed by ``core/trace.StageClock``):
+
+      * ``stage_seconds`` -- stage name -> seconds summed across all
+        traced operations; each operation partitions its own wall time
+        into the stages of ``core/trace.STAGES`` (``producer-wait``,
+        ``cap-blocked``, ``streaming``, ``replan``, ``resplice``,
+        ``plan``), so for a single operation the stage sum ~= its
+        wall-clock and across concurrent operations it sums their
+        individual critical paths.
     """
 
     __slots__ = (
@@ -77,9 +87,16 @@ class DataPlaneStats:
         "peak_outbound",
         "bytes_reduced",
         "reduce_hops",
+        "stage_seconds",
     )
 
-    _DICT_FIELDS = ("bytes_served", "peak_outbound", "bytes_reduced", "reduce_hops")
+    _DICT_FIELDS = (
+        "bytes_served",
+        "peak_outbound",
+        "bytes_reduced",
+        "reduce_hops",
+        "stage_seconds",
+    )
 
     def __init__(self):
         self.wakeups = 0
@@ -92,6 +109,7 @@ class DataPlaneStats:
         self.peak_outbound: Dict[int, int] = {}
         self.bytes_reduced: Dict[int, int] = {}
         self.reduce_hops: Dict[int, int] = {}
+        self.stage_seconds: Dict[str, float] = {}
 
     def note_bytes_served(self, node: int, nbytes: int) -> None:
         self.bytes_served[node] = self.bytes_served.get(node, 0) + nbytes
@@ -106,11 +124,30 @@ class DataPlaneStats:
     def note_reduce_hop(self, node: int) -> None:
         self.reduce_hops[node] = self.reduce_hops.get(node, 0) + 1
 
+    def note_stage(self, stage: str, seconds: float) -> None:
+        self.stage_seconds[stage] = self.stage_seconds.get(stage, 0.0) + seconds
+
     def as_dict(self) -> Dict[str, object]:
         out = {k: getattr(self, k) for k in self.__slots__ if k not in self._DICT_FIELDS}
         for k in self._DICT_FIELDS:
             out[k] = dict(getattr(self, k))
         return out
+
+    def snapshot(self) -> Dict[str, object]:
+        """Alias of :meth:`as_dict` -- a deep-enough copy of the current
+        counters (dict fields are copied) safe to keep across a reset."""
+        return self.as_dict()
+
+    def reset(self) -> None:
+        """Zero every counter in place (the object stays shared with the
+        buffers/cluster that hold a reference to it).  Benchmark harnesses
+        call this between scenarios so per-scenario counter deltas don't
+        bleed across a cluster's lifetime."""
+        for k in self.__slots__:
+            if k in self._DICT_FIELDS:
+                getattr(self, k).clear()
+            else:
+                setattr(self, k, 0)
 
 
 class BufferFailed(RuntimeError):

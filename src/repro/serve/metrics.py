@@ -10,55 +10,19 @@ arrival whether or not the request is admitted, so rejection shows up as
 
 from __future__ import annotations
 
-import bisect
 import collections
 import threading
 from typing import Dict, List, Optional, Sequence
 
+# The serving latency recorder is the shared core histogram: exact
+# percentiles below ``exact_limit`` samples (the mode serving runs live
+# in), O(log #buckets) geometric-bucket inserts past it, and every read
+# takes the lock.  This replaces a local implementation whose docstring
+# claimed O(log n) insert for what ``bisect.insort`` actually does in
+# O(n), and whose ``count``/``mean`` read shared state without the lock.
+from repro.core.trace import LatencyHistogram
 
-class LatencyHistogram:
-    """Latency recorder with exact percentiles.
-
-    Values are kept sorted so ``percentile`` is O(log n) insert + O(1)
-    query; serving runs record 1e2..1e5 samples, far below the point where
-    a bucketed sketch would be needed.
-    """
-
-    def __init__(self):
-        self._sorted: List[float] = []
-        self._sum = 0.0
-        self._lock = threading.Lock()
-
-    def record(self, seconds: float) -> None:
-        with self._lock:
-            bisect.insort(self._sorted, seconds)
-            self._sum += seconds
-
-    @property
-    def count(self) -> int:
-        return len(self._sorted)
-
-    def percentile(self, p: float) -> float:
-        """p in [0, 100]; 0.0 when empty."""
-        with self._lock:
-            if not self._sorted:
-                return 0.0
-            idx = min(len(self._sorted) - 1, int(round(p / 100.0 * (len(self._sorted) - 1))))
-            return self._sorted[idx]
-
-    def mean(self) -> float:
-        with self._lock:
-            return self._sum / len(self._sorted) if self._sorted else 0.0
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "count": float(self.count),
-            "mean": self.mean(),
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
-            "max": self.percentile(100),
-        }
+__all__ = ["LatencyHistogram", "ServeMetrics"]
 
 
 class ServeMetrics:

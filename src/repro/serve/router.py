@@ -23,6 +23,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.trace import CAT_SERVE, NODE_ROUTER, FlightRecorder
 from repro.serve.metrics import ServeMetrics
 
 
@@ -69,10 +70,14 @@ class OpenLoopRouter:
         backend,
         config: Optional[RouterConfig] = None,
         metrics: Optional[ServeMetrics] = None,
+        trace: Optional[FlightRecorder] = None,
     ):
         self.backend = backend
         self.config = config if config is not None else RouterConfig()
         self.metrics = metrics or ServeMetrics()
+        # Optional flight recorder (pass the backing cluster's to get one
+        # merged timeline); request events land in the "router" pid lane.
+        self.trace = trace if trace is not None else FlightRecorder(enabled=False)
         self._outstanding = 0
         self._lock = threading.Lock()
         self._threads: List[threading.Thread] = []
@@ -87,6 +92,11 @@ class OpenLoopRouter:
         with self._lock:
             if self._outstanding >= self.config.max_outstanding:
                 self.metrics.inc("rejected")
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_SERVE, "rejected", NODE_ROUTER, f"req-{idx}",
+                        outstanding=self._outstanding,
+                    )
                 return False
             self._outstanding += 1
         self.metrics.inc("admitted")
@@ -101,6 +111,7 @@ class OpenLoopRouter:
 
     def _run_one(self, idx: int, payload) -> None:
         t0 = time.perf_counter()
+        trace_t0 = self.trace.clock() if self.trace.enabled else None
         try:
             value = self.backend.handle_request(payload)
         except Rejected:
@@ -109,18 +120,33 @@ class OpenLoopRouter:
             # backend-side admission (replica queues full): not a failure
             self.metrics.inc("admitted", -1)
             self.metrics.inc("rejected")
+            if trace_t0 is not None:
+                self.trace.instant(
+                    CAT_SERVE, "replica-rejected", NODE_ROUTER, f"req-{idx}"
+                )
             return
         except BaseException as e:  # noqa: BLE001
             with self._lock:
                 self._outstanding -= 1
             self.metrics.inc("failed")
             self.errors.append((idx, e))
+            if trace_t0 is not None:
+                self.trace.span(
+                    CAT_SERVE, "request-failed", NODE_ROUTER,
+                    trace_t0, self.trace.clock() - trace_t0, f"req-{idx}",
+                    error=type(e).__name__,
+                )
             return
         with self._lock:
             self._outstanding -= 1
             self.results.append((idx, value))
         self.metrics.inc("completed")
         self.metrics.record_latency(time.perf_counter() - t0)
+        if trace_t0 is not None:
+            self.trace.span(
+                CAT_SERVE, "request", NODE_ROUTER,
+                trace_t0, self.trace.clock() - trace_t0, f"req-{idx}",
+            )
 
     # -- open-loop run ------------------------------------------------------
 

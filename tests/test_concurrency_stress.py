@@ -180,3 +180,88 @@ def test_delete_mid_reduce_wakes_chain_promptly():
     assert not t.is_alive(), "chain never woke on Delete"
     assert isinstance(got.get("err"), ObjectLost), got
     assert elapsed < 5.0, f"woke only via timeout ({elapsed:.1f}s), not the event"
+
+
+def test_stats_and_trace_consistent_under_failure():
+    """Observability-under-failure invariants on a traced mid-chain kill:
+
+      * the re-splice is VISIBLE -- one ``resplice`` trace instant per
+        ``stats['resplices']`` increment (the chain machinery cannot
+        rebuild lineage without recording it);
+      * stage attribution stays an exact partition -- per-stage totals
+        are non-negative, live ``stats['stage_seconds']`` equals the sum
+        of ``stage`` spans in the dump, and for the reduce target (one
+        attribution clock) the stage sum equals that operation's wall
+        span;
+      * byte accounting survives the kill -- ``bytes_served`` is
+        populated and non-negative for every serving node.
+    """
+    from repro.core.trace import CAT_CHAIN, STAGE_RESPLICE, STAGES, critical_path
+
+    elems = 100_000  # 800 KB, 4 sources -> 1-D chain
+    c = LocalCluster(6, chunk_size=32 * 1024, pace=0.002, trace=True)
+    k = 4  # node 5 is the spare with the duplicate of g1
+    vals = [np.random.RandomState(100 + i).rand(elems) for i in range(k)]
+    for i, v in enumerate(vals):
+        c.put(i + 1, f"g{i}", v)
+    c.put(5, "g1", vals[1])  # victim's contribution survives the kill
+
+    from concurrent.futures import Future
+
+    fut: Future = Future()
+
+    def run():
+        try:
+            c.reduce(0, "sum", [f"g{i}" for i in range(k)], timeout=60.0)
+            fut.set_result(c.get(0, "sum", timeout=30.0))
+        except BaseException as e:  # noqa: BLE001
+            fut.set_exception(e)
+
+    threading.Thread(target=run, daemon=True).start()
+    # Kill node 2 (holds g1 and the hop folding g0+g1) while node 3's
+    # downstream hop streams from it -- forces a mid-chain re-splice.
+    deadline = time.time() + 20.0
+    killed = False
+    while time.time() < deadline:
+        for oid, buf in list(c.stores[3].objects.items()):
+            if "-hop" in oid and 0 < buf.bytes_present < buf.size:
+                c.fail_node(2)
+                killed = True
+                break
+        if killed:
+            break
+        time.sleep(0.0005)
+    assert killed, "never caught the downstream hop mid-stream"
+    got = fut.result(timeout=30.0)
+    np.testing.assert_allclose(got, sum(vals), rtol=1e-12)
+
+    stats = c.stats
+    evs = c.trace.events()
+
+    # -- resplice visibility: trace instants match the counter exactly.
+    assert stats["resplices"] >= 1
+    resplice_instants = [
+        e for e in evs if e[3] == CAT_CHAIN and e[4] == "resplice"
+    ]
+    assert len(resplice_instants) == stats["resplices"]
+    # ... and replan/resplice time was actually attributed somewhere.
+    stage_secs = stats["stage_seconds"]
+    assert STAGE_RESPLICE in stage_secs or "replan" in stage_secs
+
+    # -- stage attribution: a partition, not an estimate.
+    assert set(stage_secs) <= set(STAGES)
+    assert all(v >= 0.0 for v in stage_secs.values())
+    cp_all = critical_path(evs)
+    assert sum(stage_secs.values()) == pytest.approx(cp_all["total"], rel=1e-6)
+    for stage, total in cp_all["stages"].items():
+        assert stage_secs[stage] == pytest.approx(total, rel=1e-6)
+    # The reduce target has exactly one attribution clock (the chain
+    # finalization), so its stage spans tile its wall span exactly.
+    cp_sum = critical_path(evs, object_id="sum")
+    assert cp_sum["events"] >= 2
+    assert cp_sum["total"] == pytest.approx(cp_sum["wall"], rel=0.02)
+
+    # -- byte accounting survived the kill.
+    served = stats["bytes_served"]
+    assert served, "no bytes_served accounting"
+    assert all(v >= 0 for v in served.values())

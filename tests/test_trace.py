@@ -1,0 +1,359 @@
+"""Flight recorder, critical-path attribution, latency histogram.
+
+Covers the observability layer end to end: recorder semantics (rings,
+clocks, disabled cost), Chrome-trace export validity, stage attribution
+consistency between ``cluster.stats`` and a trace dump, the shared
+bucketed histogram (exact vs spilled mode), and the simulator plane
+recording on simulated time.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.local import LocalCluster
+from repro.core.simulation import SimCluster
+from repro.core.store import DataPlaneStats
+from repro.core.trace import (
+    CAT_CHAIN,
+    CAT_DIRECTORY,
+    CAT_FETCH,
+    CAT_STAGE,
+    CAT_STREAM,
+    CATEGORIES,
+    STAGE_PLAN,
+    STAGE_STREAMING,
+    STAGES,
+    FlightRecorder,
+    LatencyHistogram,
+    StageClock,
+    critical_path,
+)
+
+
+# ---------------------------------------------------------------------------
+# recorder semantics
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_recorder_records_nothing():
+    rec = FlightRecorder(enabled=False)
+    rec.instant(CAT_FETCH, "plan-leg", 0, "x")
+    rec.span(CAT_STREAM, "copy-leg", 0, 0.0, 1.0, "x")
+    assert rec.events() == []
+    assert rec.count() == 0
+
+
+def test_enable_disable_clear_roundtrip():
+    rec = FlightRecorder()
+    rec.enable()
+    rec.instant(CAT_FETCH, "a", 0)
+    rec.disable()
+    rec.instant(CAT_FETCH, "b", 0)  # dropped
+    assert [e[4] for e in rec.events()] == ["a"]
+    rec.clear()
+    assert rec.events() == []
+
+
+def test_events_merge_threads_in_time_order():
+    rec = FlightRecorder(enabled=True)
+
+    def worker(node):
+        for i in range(10):
+            rec.instant(CAT_STREAM, f"w{node}-{i}", node)
+
+    ts = [threading.Thread(target=worker, args=(n,)) for n in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    evs = rec.events()
+    assert len(evs) == 40
+    assert [e[0] for e in evs] == sorted(e[0] for e in evs)
+    # Each event carries its recording thread's ring label.
+    assert len({e[2] for e in evs}) == 4
+
+
+def test_ring_bounded_drops_oldest():
+    rec = FlightRecorder(enabled=True, capacity_per_thread=64)
+    for i in range(200):
+        rec.instant(CAT_FETCH, f"e{i}", 0)
+    evs = rec.events()
+    assert len(evs) <= 64 + 1
+    # Flight-recorder semantics: the TAIL survives.
+    assert evs[-1][4] == "e199"
+    assert evs[0][4] != "e0"
+
+
+def test_custom_clock_used_for_timestamps():
+    now = [10.0]
+    rec = FlightRecorder(enabled=True, clock=lambda: now[0])
+    rec.instant(CAT_CHAIN, "hop-start", 1)
+    now[0] = 12.5
+    rec.instant(CAT_CHAIN, "resplice", 1)
+    ts = [e[0] for e in rec.events()]
+    assert ts == [10.0, 12.5]
+
+
+# ---------------------------------------------------------------------------
+# stage clock + critical path
+# ---------------------------------------------------------------------------
+
+
+def test_stage_clock_partitions_and_merges():
+    now = [0.0]
+    rec = FlightRecorder(enabled=True, clock=lambda: now[0])
+    stats = DataPlaneStats()
+    sc = StageClock(stats, rec, node=0, object_id="x")
+    now[0] = 1.0
+    sc.switch(STAGE_STREAMING)
+    now[0] = 1.5
+    sc.switch(STAGE_STREAMING)  # same stage: merges, no span emitted
+    now[0] = 3.0
+    sc.switch(STAGE_PLAN)
+    now[0] = 3.25
+    sc.close()
+    cp = critical_path(rec.events(), object_id="x")
+    assert cp["events"] == 3  # plan, streaming (merged), plan
+    assert cp["stages"][STAGE_PLAN] == pytest.approx(1.0 + 0.25)
+    assert cp["stages"][STAGE_STREAMING] == pytest.approx(2.0)
+    assert cp["total"] == pytest.approx(3.25)
+    assert cp["wall"] == pytest.approx(3.25)
+    # Live totals agree with the trace dump.
+    assert stats.stage_seconds[STAGE_PLAN] == pytest.approx(1.25)
+    assert stats.stage_seconds[STAGE_STREAMING] == pytest.approx(2.0)
+
+
+def test_stage_clock_feeds_stats_even_when_trace_disabled():
+    rec = FlightRecorder(enabled=False)
+    stats = DataPlaneStats()
+    sc = StageClock(stats, rec, node=0, object_id="x")
+    time.sleep(0.002)
+    sc.close()
+    assert stats.stage_seconds[STAGE_PLAN] > 0.0
+    assert rec.events() == []  # no trace without enable
+
+
+def test_critical_path_object_filter():
+    now = [0.0]
+    rec = FlightRecorder(enabled=True, clock=lambda: now[0])
+    for oid, dur in (("a", 1.0), ("b", 3.0)):
+        rec.span(CAT_STAGE, STAGE_STREAMING, 0, 0.0, dur, oid)
+    assert critical_path(rec.events(), "a")["total"] == pytest.approx(1.0)
+    assert critical_path(rec.events(), "b")["total"] == pytest.approx(3.0)
+    assert critical_path(rec.events())["total"] == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# DataPlaneStats snapshot / reset
+# ---------------------------------------------------------------------------
+
+
+def test_stats_snapshot_and_reset():
+    stats = DataPlaneStats()
+    stats.note_stage(STAGE_STREAMING, 0.5)
+    stats.wakeups += 3
+    snap = stats.snapshot()
+    assert snap["wakeups"] == 3
+    assert snap["stage_seconds"][STAGE_STREAMING] == pytest.approx(0.5)
+    stats.reset()
+    assert stats.wakeups == 0
+    assert stats.stage_seconds == {}
+    # The snapshot is a copy, not a view of the zeroed fields.
+    assert snap["wakeups"] == 3
+
+
+# ---------------------------------------------------------------------------
+# traced threaded cluster: every data-plane category + valid export
+# ---------------------------------------------------------------------------
+
+
+def _traced_broadcast_reduce(tmp_path):
+    c = LocalCluster(4, chunk_size=32 * 1024, trace=True)
+    x = np.random.RandomState(0).rand(40_000)  # 320 KB: streaming path
+    c.put(0, "x", x)
+    for i in range(1, 4):
+        np.testing.assert_array_equal(c.get(i, "x", timeout=30.0), x)
+    vals = [np.random.RandomState(10 + i).rand(40_000) for i in range(4)]
+    for i, v in enumerate(vals):
+        c.put(i, f"g{i}", v)
+    c.reduce(0, "sum", [f"g{i}" for i in range(4)], timeout=30.0)
+    np.testing.assert_allclose(c.get(0, "sum", timeout=30.0), sum(vals), rtol=1e-10)
+    path = tmp_path / "trace.json"
+    n = c.dump_trace(str(path))
+    return c, path, n
+
+
+def test_traced_cluster_covers_dataplane_categories(tmp_path):
+    c, path, n = _traced_broadcast_reduce(tmp_path)
+    assert n > 0
+    dataplane_cats = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE)
+    for cat in dataplane_cats:
+        assert c.trace.count(cat) >= 1, f"no {cat!r} events recorded"
+    # stats stage attribution populated and consistent with the dump
+    stage_secs = c.stats["stage_seconds"]
+    assert stage_secs and all(v >= 0.0 for v in stage_secs.values())
+    assert set(stage_secs) <= set(STAGES)
+    cp = critical_path(c.trace.events())
+    for stage, total in cp["stages"].items():
+        assert stage_secs[stage] == pytest.approx(total, rel=1e-6)
+
+
+def test_chrome_trace_roundtrip_valid(tmp_path):
+    c, path, n = _traced_broadcast_reduce(tmp_path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    bodies = [e for e in evs if e.get("ph") != "M"]
+    metas = [e for e in evs if e.get("ph") == "M"]
+    assert len(bodies) == n
+    assert metas, "no process_name metadata"
+    for e in bodies:
+        assert e["ph"] in ("X", "i")
+        assert isinstance(e["pid"], int) and e["pid"] >= 0
+        assert e["ts"] >= 0.0  # relative to first event
+        assert e["cat"] in CATEGORIES
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    # every node lane is labelled
+    labelled = {m["pid"] for m in metas}
+    assert {e["pid"] for e in bodies} <= labelled
+
+
+def test_reset_stats_snapshots_then_zeroes():
+    c = LocalCluster(2, chunk_size=32 * 1024)
+    x = np.random.RandomState(1).rand(40_000)
+    c.put(0, "x", x)
+    np.testing.assert_array_equal(c.get(1, "x", timeout=30.0), x)
+    snap = c.reset_stats()
+    assert snap["bytes_served"], "fetch did not account served bytes"
+    after = c.stats
+    assert not after["bytes_served"]
+    assert after["stage_seconds"] == {}
+
+
+def test_untraced_cluster_records_no_events_but_attributes_stages():
+    c = LocalCluster(2, chunk_size=32 * 1024)  # trace off (default)
+    x = np.random.RandomState(2).rand(40_000)
+    c.put(0, "x", x)
+    np.testing.assert_array_equal(c.get(1, "x", timeout=30.0), x)
+    assert c.trace.count() == 0
+    assert c.stats["stage_seconds"], "stage attribution must not need tracing"
+
+
+# ---------------------------------------------------------------------------
+# simulator plane: same schema, simulated clock
+# ---------------------------------------------------------------------------
+
+
+def test_sim_cluster_trace_uses_simulated_time(tmp_path):
+    from repro.core.simulation import ClusterSpec, Hoplite
+
+    c = SimCluster(ClusterSpec(num_nodes=4), trace=True)
+    h = Hoplite(c)
+    oids = {}
+    for i in range(4):
+        oid = f"g{i}"
+        h.put(i, oid, 1 << 20)
+        oids[oid] = i
+    c.sim.run()
+    h.reduce(0, "sum", oids, 1 << 20)
+    c.sim.run()
+    evs = c.trace.events()
+    assert evs, "simulator recorded nothing"
+    assert {e[3] for e in evs} >= {CAT_STREAM, CAT_CHAIN}
+    # Timestamps are simulated seconds (deterministic, small), not wall
+    # perf_counter values (machine-uptime scale).
+    assert max(e[0] for e in evs) < 60.0
+    path = tmp_path / "sim_trace.json"
+    assert c.dump_trace(str(path)) == len(evs)
+    with open(path) as f:
+        json.load(f)  # valid JSON
+
+
+# ---------------------------------------------------------------------------
+# latency histogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_exact_mode_percentiles():
+    h = LatencyHistogram()
+    for v in [0.001 * i for i in range(1, 101)]:
+        h.record(v)
+    assert h.count == 100
+    assert h.mean() == pytest.approx(0.0505)
+    assert h.percentile(50) == pytest.approx(0.050, rel=0.05)  # nearest rank
+    assert h.percentile(100) == pytest.approx(0.100)
+    s = h.summary()
+    assert set(s) == {"count", "mean", "p50", "p90", "p99", "p999", "max"}
+
+
+def test_histogram_bucketed_mode_monotone_and_bounded():
+    h = LatencyHistogram(exact_limit=50)
+    rng = np.random.RandomState(0)
+    samples = np.exp(rng.normal(-6.0, 1.0, size=5000))  # lognormal latencies
+    for v in samples:
+        h.record(float(v))
+    assert h._samples is None, "did not spill to buckets"
+    p50, p99, p999, pmax = (h.percentile(p) for p in (50, 99, 99.9, 100))
+    assert 0.0 < p50 <= p99 <= p999 <= pmax
+    assert pmax == pytest.approx(float(samples.max()))
+    # bucket resolution: within ~10% of the exact percentile
+    assert p50 == pytest.approx(float(np.percentile(samples, 50)), rel=0.1)
+    assert p99 == pytest.approx(float(np.percentile(samples, 99)), rel=0.1)
+
+
+def test_histogram_reset_and_empty():
+    h = LatencyHistogram()
+    assert h.percentile(50) == 0.0
+    assert h.mean() == 0.0
+    h.record(1.0)
+    h.reset()
+    assert h.count == 0
+    assert h.summary()["max"] == 0.0
+
+
+def test_histogram_concurrent_record_and_read():
+    h = LatencyHistogram(exact_limit=100)  # force spill mid-run
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        rng = np.random.RandomState(threading.get_ident() % 1000)
+        for _ in range(2000):
+            h.record(float(rng.rand()) * 0.01)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                s = h.summary()
+                assert 0.0 <= s["p50"] <= s["max"] + 1e-12
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    ws = [threading.Thread(target=writer) for _ in range(4)]
+    r = threading.Thread(target=reader)
+    r.start()
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    r.join()
+    assert not errors
+    assert h.count == 8000
+
+
+def test_serve_metrics_uses_shared_histogram():
+    from repro.serve.metrics import LatencyHistogram as ServeHist
+    from repro.serve.metrics import ServeMetrics
+
+    assert ServeHist is LatencyHistogram
+    m = ServeMetrics()
+    m.record_latency(0.25)
+    snap = m.snapshot()
+    assert snap["latency"]["count"] == 1.0
+    assert snap["latency"]["p50"] == pytest.approx(0.25)
