@@ -27,6 +27,11 @@ ensemble serving) blocks on.  It is the source of the tracked
     reduce target) vs the reduce-then-broadcast composition; tracked
     runs assert the 8-node fused wall-clock beats the sum by >= 1.3x and
     that the 2-D plan spreads hop reductions (<= ceil(n/sqrt n)/node).
+  * ``noisy_allreduce`` -- the bounded-time acceptance scenario: 8-way
+    gradient sync under an injected FaultPlan (per-link jitter + one 4x
+    straggler); tracked runs assert bounded-time mode
+    (``deadline=, min_participants=7``) holds p99 <= 1.5x the no-noise
+    baseline while the unbounded arm rides the straggler (>= 2.5x).
 
 Besides wall-clock, every scenario reports *contention counters*:
 
@@ -408,6 +413,147 @@ def bench_allreduce_scaling(nbytes, chunk_size, node_counts=(2, 4, 8, 16), stric
     return dt, moved, last, extras
 
 
+def bench_noisy_allreduce(nbytes, chunk_size, strict=True, rounds=None):
+    """Bounded-time allreduce acceptance scenario (OptiReduce-style tail
+    claim): an 8-way gradient sync where every node "computes" for
+    ~1 s (seeded jitter) before Putting its gradient, under an injected
+    FaultPlan -- per-link latency jitter plus ONE 4x straggler (node 7,
+    whose compute takes ~4 s and whose streams crawl).  Three arms per
+    round, back-to-back on fresh clusters so container noise is
+    common-mode:
+
+      * ``baseline``  -- no injected noise, unbounded allreduce
+      * ``unbounded`` -- noisy plane, unbounded: completion RIDES the
+        straggler (compute + its 4x-slow streams)
+      * ``bounded``   -- noisy plane, ``deadline=CUT, min_participants=7``:
+        the straggler's contribution is dropped at the cut-off and p99
+        tracks the 7th-fastest participant
+
+    Tracked assertions (strict, full payload): bounded p99 <= 1.5x the
+    no-noise baseline p99 while unbounded p99 >= 2.5x it; the cut is
+    deterministic (exactly ``g7`` dropped, participation mask says so)
+    and the partial fold equals the exact sum of the 7 kept gradients.
+    """
+    from repro.core.faults import (
+        FaultInjector, FaultPlan, FaultToleranceConfig, LinkFault, StragglerSpec,
+    )
+    from repro.core.local import LocalCluster
+
+    windows = 16
+    pace_chunk = max(64 * 1024, -(-nbytes // windows))
+    pace_chunk += (-pace_chunk) % 64
+    pace = 0.003
+    rounds = rounds if rounds is not None else (5 if nbytes >= 4 * MB else 3)
+    base_compute = 1.0
+    cut = 1.4  # soft deadline: fast arrivals (<= ~1.2 s) beat it, the
+    #            ~4 s straggler never does
+    straggler = NUM_NODES - 1
+    noisy_plan = FaultPlan(
+        seed=7,
+        link_faults=[LinkFault(jitter_s=pace * 0.5)],
+        stragglers=[StragglerSpec(node=straggler, factor=4.0)],
+    )
+    clean_plan = FaultPlan(seed=7)  # same seeded compute jitter, no faults
+    ft = FaultToleranceConfig(stall_timeout=1.0, watermark_recheck_s=0.25)
+
+    def one(plan, bounded, rnd):
+        inj = FaultInjector(plan)
+        c = LocalCluster(
+            NUM_NODES, chunk_size=pace_chunk, pace=pace,
+            fault_tolerance=ft, faults=inj,
+        )
+        snap = attach_counters(c)
+        vals = [np.random.RandomState(300 + i).rand(nbytes // 8)
+                for i in range(NUM_NODES)]
+
+        def compute_and_put(i):
+            time.sleep(inj.compute_delay(i, base_compute, k=rnd))
+            c.put(i, f"g{i}", vals[i])
+
+        threads = [
+            threading.Thread(target=compute_and_put, args=(i,), daemon=True)
+            for i in range(NUM_NODES)
+        ]
+        srcs = [f"g{i}" for i in range(NUM_NODES)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        if bounded:
+            res = c.allreduce(
+                list(range(NUM_NODES)), "sum", srcs,
+                timeout=300.0, deadline=cut,
+                min_participants=NUM_NODES - 1,
+            )
+        else:
+            res = c.allreduce(list(range(NUM_NODES)), "sum", srcs, timeout=300.0)
+        dt = time.perf_counter() - t0
+        # Correctness OUTSIDE the timed region.
+        for t in threads:
+            t.join(timeout=60.0)
+        mask = getattr(res, "mask", ())
+        if bounded and getattr(res, "cut", False):
+            expect = sum(v for v, m in zip(vals, mask) if m)
+            participant_nodes = [i for i, m in enumerate(mask) if m]
+        else:
+            expect = sum(vals)
+            participant_nodes = list(range(NUM_NODES))
+        for i in participant_nodes:
+            np.testing.assert_allclose(
+                c.get(i, "sum", timeout=60.0), expect, rtol=1e-10
+            )
+        return dt, snap(), res
+
+    arms = {"baseline": [], "unbounded": [], "bounded": []}
+    masks = []
+    counters = {}
+    for rnd in range(rounds):
+        db, _cb, _rb = one(clean_plan, bounded=False, rnd=rnd)
+        du, _cu, _ru = one(noisy_plan, bounded=False, rnd=rnd)
+        dk, ck, rk = one(noisy_plan, bounded=True, rnd=rnd)
+        arms["baseline"].append(db)
+        arms["unbounded"].append(du)
+        arms["bounded"].append(dk)
+        counters = ck
+        masks.append(
+            {"cut": getattr(rk, "cut", False),
+             "dropped": list(getattr(rk, "dropped", ()))}
+        )
+    lat = {k: _latency_summary(v) for k, v in arms.items()}
+    base_p99, unb_p99, bnd_p99 = (
+        lat["baseline"]["p99"], lat["unbounded"]["p99"], lat["bounded"]["p99"]
+    )
+    extras = {
+        "arm_latency": lat,
+        "latency": lat["bounded"],
+        "bounded_vs_baseline_p99_x": round(bnd_p99 / base_p99, 2),
+        "unbounded_vs_baseline_p99_x": round(unb_p99 / base_p99, 2),
+        "cut_masks": masks,
+        "straggler_cuts": counters.get("straggler_cuts", 0),
+        "deadline_s": cut,
+        "compute_s": base_compute,
+        "pace": pace,
+        "pace_chunk": pace_chunk,
+        "rounds": rounds,
+    }
+    # Structural invariants at any payload: every bounded round must have
+    # cut EXACTLY the straggler's contribution.
+    for m in masks:
+        assert m["cut"] and m["dropped"] == [f"g{straggler}"], masks
+    assert counters.get("straggler_cuts", 0) >= 1, counters
+    if strict and nbytes >= 4 * MB:
+        assert bnd_p99 <= 1.5 * base_p99, (
+            f"bounded-time allreduce p99 {bnd_p99:.3f}s exceeds 1.5x the "
+            f"no-noise baseline {base_p99:.3f}s"
+        )
+        assert unb_p99 >= 2.5 * base_p99, (
+            f"unbounded arm p99 {unb_p99:.3f}s does not ride the straggler "
+            f"(baseline {base_p99:.3f}s) -- injection too weak to matter"
+        )
+    dt = min(arms["bounded"])
+    moved = nbytes * 2 * (NUM_NODES - 2)
+    return dt, moved, counters, extras
+
+
 def bench_broadcast_scaling(nbytes, chunk_size, receiver_counts=(2, 4, 8, 16), strict=True):
     """Adaptive-broadcast scaling: wall-clock of an N-receiver fan-out of
     one object, N in ``receiver_counts``, on a paced cluster (pace models
@@ -593,6 +739,7 @@ SCENARIOS = [
     ("concurrent", bench_concurrent),
     ("broadcast_scaling", bench_broadcast_scaling),
     ("allreduce_scaling", bench_allreduce_scaling),
+    ("noisy_allreduce", bench_noisy_allreduce),
 ]
 
 
@@ -604,7 +751,7 @@ def run_suite(quick: bool = False, strict: bool = True):
     for name, fn in SCENARIOS:
         kwargs = (
             {"strict": strict}
-            if name in ("broadcast_scaling", "allreduce_scaling")
+            if name in ("broadcast_scaling", "allreduce_scaling", "noisy_allreduce")
             else {}
         )
         out = fn(nbytes, chunk_size, **kwargs)

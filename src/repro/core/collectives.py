@@ -537,3 +537,24 @@ def grad_sync(
         return out / n if mean else out
 
     return jax.tree_util.tree_map(one, grads)
+
+
+def partial_fold_scale(mask) -> float:
+    """Unbiased-mean correction for a bounded-time partial SUM fold.
+
+    ``LocalCluster.allreduce(..., deadline=, min_participants=)`` returns
+    the exact SUM of the *participating* contributions (``mask[i]`` True)
+    -- it never rescales the bytes it folds.  A data-parallel trainer
+    that divides the synchronized gradient by the WORLD size would bias
+    it low by ``kept/n``; multiply the partial sum by this factor
+    (``n / kept``) first so ``scaled_sum / n`` equals the mean over the
+    participants -- an unbiased estimate of the full mean when straggler
+    identity is independent of the gradient (the usual assumption; see
+    README "Fault injection and bounded-time collectives" for when it is
+    not).  Pure Python on the participation mask -- no jax required.
+    """
+    mask = tuple(bool(m) for m in mask)
+    kept = sum(mask)
+    if kept == 0:
+        raise ValueError("partial_fold_scale: empty participation mask")
+    return len(mask) / kept

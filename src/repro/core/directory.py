@@ -188,6 +188,7 @@ class ObjectDirectory:
         min_lead: int = 0,
         max_out_degree: Optional[int] = None,
         dead=frozenset(),
+        avoid=frozenset(),
     ) -> Optional[Location]:
         """Least-loaded copy whose watermark leads ``min_lead`` (section
         4.2: a receiver may fetch from ANY node holding the object,
@@ -197,6 +198,10 @@ class ObjectDirectory:
         holder's outbound-load counter is charged instead, capping each
         node at ``max_out_degree`` *concurrent* sends.  The caller MUST
         pair every non-None return with :meth:`release_source`.
+
+        ``avoid`` soft-deprioritizes nodes the receiver already stalled
+        on (see ``scheduler.select_source``) -- they lose every tie but
+        remain pickable when no other copy exists.
         """
         shard = self._shard(object_id)
         locs = shard.locations.get(object_id)
@@ -216,6 +221,7 @@ class ObjectDirectory:
             min_lead=min_lead,
             max_out_degree=max_out_degree,
             tick=self._tick,
+            avoid=avoid,
         )
         rec = self.recorder
         if chosen is not None:

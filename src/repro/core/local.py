@@ -55,10 +55,11 @@ Concurrency model (README "Data-plane concurrency model"):
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,10 +73,12 @@ from repro.core.api import (
     SUM,
 )
 from repro.core.directory import ObjectDirectory, ReplicatedDirectory
+from repro.core.faults import FaultInjector, FaultPlan, FaultToleranceConfig
 from repro.core.planner import (
     LinkSpec,
     EC2_LINK,
     allreduce_policy,
+    bounded_time_participants,
     broadcast_policy,
     use_two_dimensional,
 )
@@ -91,6 +94,7 @@ from repro.core.trace import (
     STAGE_PRODUCER_WAIT,
     STAGE_REPLAN,
     STAGE_RESPLICE,
+    STAGE_STRAGGLER_CUT,
     STAGE_STREAMING,
     StageClock,
 )
@@ -113,13 +117,23 @@ class StaleBuffer(RuntimeError):
 
 class SourceStalled(RuntimeError):
     """The source's watermark stopped advancing (its own upstream died or
-    wedged) while another copy exists: release the slot and re-plan to a
-    different source, resuming from the receiver's current watermark."""
+    wedged) past the stall budget while recovery is possible -- another
+    copy exists, or the stalled partial can be re-built from lineage:
+    release the slot and re-plan to a different source (the stalled node
+    is soft-avoided in re-selection), resuming from the receiver's
+    current watermark."""
+
+    def __init__(self, msg: str, node: Optional[int] = None, object_id: str = ""):
+        super().__init__(msg)
+        self.node = node
+        self.object_id = object_id
 
 
-# Sentinel timeout for watermark waits: bounds how long a reader sleeps
-# before re-checking cluster membership (it is normally woken long before
-# this by the buffer's own condition or its ``fail()``).
+# Legacy default for the watermark-wait recheck period; the live value is
+# ``FaultToleranceConfig.watermark_recheck_s`` threaded through the
+# cluster (it bounds how long a reader sleeps before re-checking cluster
+# membership -- it is normally woken long before this by the buffer's own
+# condition or its ``fail()``).  Kept for backward compatibility.
 _WATERMARK_RECHECK_S = 5.0
 
 # A relay stream publishes its destination watermark at least this many
@@ -127,6 +141,34 @@ _WATERMARK_RECHECK_S = 5.0
 # inbound leg instead of seeing one 0 -> complete jump (store-and-forward).
 # Per-hop lag is ~1/PIPELINE_MIN_WINDOWS of the object's transfer time.
 PIPELINE_MIN_WINDOWS = 16
+
+
+class AllreduceResult(str):
+    """Return value of ``LocalCluster.allreduce``: the target object id,
+    enriched with the participation outcome of a bounded-time run.
+
+    A ``str`` subclass so every existing caller that treats the return
+    as an object id (Get it, delete it, pass it on) works unchanged;
+    bounded-time callers additionally read:
+
+      * ``participants`` / ``dropped`` -- source ids folded in / cut off
+      * ``mask`` -- tuple of bools over the ORIGINAL source order
+        (``mask[i]`` iff ``source_ids[i]`` contributed)
+      * ``cut`` -- True when the straggler cut-off actually fired
+
+    The partial fold is the exact ``op``-fold of the participating
+    contributions only -- it is NOT rescaled; see
+    ``collectives.partial_fold_scale`` for the unbiased-mean correction.
+    """
+
+    def __new__(cls, target_id: str, participants=(), dropped=(), mask=(),
+                cut: bool = False):
+        self = super().__new__(cls, target_id)
+        self.participants = tuple(participants)
+        self.dropped = tuple(dropped)
+        self.mask = tuple(mask)
+        self.cut = cut
+        return self
 
 
 class LocalCluster:
@@ -142,8 +184,11 @@ class LocalCluster:
         pace: float = 0.0,  # optional seconds of sleep per chunk (tests)
         store_capacity: Optional[int] = None,
         max_out_degree: Optional[int] = None,  # None -> broadcast policy
-        stall_timeout: float = 2 * _WATERMARK_RECHECK_S,
+        stall_timeout: Optional[float] = None,  # overrides fault_tolerance
         trace: bool = False,
+        fault_tolerance: Optional[FaultToleranceConfig] = None,
+        faults=None,  # FaultPlan or FaultInjector (noise only; call
+        #               injector.start(cluster) to arm kills/restarts)
     ):
         self.num_nodes = num_nodes
         # ``chunk_size=None`` autotunes per object via the Appendix-A cost
@@ -162,7 +207,17 @@ class LocalCluster:
         self.pace = pace
         self.store_capacity = store_capacity
         self.max_out_degree = max_out_degree
-        self.stall_timeout = stall_timeout
+        # One config object for every recovery budget and default timeout
+        # (stall budget, watermark recheck, get/reduce/join deadlines);
+        # the legacy ``stall_timeout`` kwarg overrides just that field.
+        ft = fault_tolerance or FaultToleranceConfig()
+        if stall_timeout is not None:
+            ft = dataclasses.replace(ft, stall_timeout=stall_timeout)
+        self.ft = ft
+        self.stall_timeout = ft.stall_timeout  # back-compat alias
+        if faults is not None and isinstance(faults, FaultPlan):
+            faults = FaultInjector(faults)
+        self.faults: Optional[FaultInjector] = faults
         self.directory = ReplicatedDirectory(num_replicas=directory_replicas)
         self._stats = DataPlaneStats()
         # Flight recorder (core/trace): always constructed so call sites
@@ -255,7 +310,8 @@ class LocalCluster:
         if node in self.dead:
             raise DeadNode(str(node))
 
-    def join(self, timeout: float = 30.0):
+    def join(self, timeout: Optional[float] = None):
+        timeout = self.ft.join_timeout if timeout is None else timeout
         deadline = time.time() + timeout
         for t in self._threads:
             t.join(max(0.0, deadline - time.time()))
@@ -345,8 +401,10 @@ class LocalCluster:
 
     # -- Get -------------------------------------------------------------------
 
-    def get(self, node: int, object_id: str, timeout: float = 30.0) -> np.ndarray:
-        """Blocking receiver-driven Get with relay through partial copies."""
+    def get(self, node: int, object_id: str, timeout: Optional[float] = None) -> np.ndarray:
+        """Blocking receiver-driven Get with relay through partial copies.
+        ``timeout=None`` uses ``FaultToleranceConfig.get_timeout``."""
+        timeout = self.ft.get_timeout if timeout is None else timeout
         self._check_alive(node)
         deadline = time.time() + timeout
         with self._dir_lock:
@@ -379,6 +437,10 @@ class LocalCluster:
         destination watermark instead of restarting."""
         key = (node, object_id)
         owns_stream = [False]
+        # Nodes this fetch already stalled on: soft-deprioritized in
+        # re-selection (they lose ties but stay pickable when they hold
+        # the only copy -- eviction must never wedge the fetch).
+        avoid: set = set()
         # Critical-path attribution: this fetch partitions its own wall
         # time into stages.  After a failed leg, planning time and waits
         # classify as "replan" until the next leg starts streaming.
@@ -423,6 +485,7 @@ class LocalCluster:
                     min_lead=progress,
                     max_out_degree=self.broadcast_out_degree(size),
                     dead=self.dead,
+                    avoid=frozenset(avoid),
                 )
                 if loc is None:
                     if not self.directory.available_elsewhere(object_id, node):
@@ -572,7 +635,11 @@ class LocalCluster:
                 except SourceStalled:
                     # Source watermark wedged but other copies exist: free
                     # the slot and re-plan (resuming, not restarting).
+                    # The stalled holder is soft-avoided from now on, so
+                    # re-selection lands on a faster replica.
                     replanning[0] = True
+                    avoid.add(loc.node)
+                    self._stats.stall_replans += 1
                     sc.switch(STAGE_REPLAN)
                     if self.trace.enabled:
                         self.trace.instant(
@@ -706,12 +773,15 @@ class LocalCluster:
         window_cap += (-window_cap) % 64  # keep watermarks element-aligned
         last_advance = time.time()
         served = 0  # flushed to the shared counters once, in finally
+        win_k = 0  # window ordinal (keys the injector's pure jitter draws)
         leg_t0 = self.trace.clock() if self.trace.enabled else None
         try:
             while pos < total:
                 if stage is not None and src_buf.bytes_present <= pos:
                     stage.switch(STAGE_PRODUCER_WAIT)
-                avail = src_buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+                avail = src_buf.wait_for_bytes(
+                    pos + 1, timeout=self.ft.watermark_recheck_s
+                )
                 if src in self.dead:
                     raise DeadNode(str(src))
                 if src_buf.failed:
@@ -721,7 +791,7 @@ class LocalCluster:
                     # the source has been wedged past the stall budget and
                     # another copy exists, re-plan rather than riding our
                     # own deadline.
-                    if time.time() - last_advance >= self.stall_timeout:
+                    if time.time() - last_advance >= self.ft.stall_timeout:
                         with self._dir_lock:
                             elsewhere = any(
                                 l.node not in (src, dst) and l.node not in self.dead
@@ -733,7 +803,9 @@ class LocalCluster:
                                     CAT_STREAM, "watermark-stall", dst,
                                     object_id, src=src, at=pos,
                                 )
-                            raise SourceStalled(f"{object_id}@{src}")
+                            raise SourceStalled(
+                                f"{object_id}@{src}", node=src, object_id=object_id
+                            )
                     continue
                 last_advance = time.time()
                 if stage is not None:
@@ -743,6 +815,15 @@ class LocalCluster:
                     time.sleep(self.pace)
                 else:
                     avail = min(avail, pos + window_cap)
+                if self.faults is not None:
+                    # Injected link jitter / bandwidth droop / straggler
+                    # slowdown: stretch this window by the plan's penalty
+                    # (pure in (seed, src, dst, k) -- replay-stable).
+                    base = self.pace or (avail - pos) / self.link.bandwidth
+                    extra = self.faults.window_penalty(src, dst, win_k, base)
+                    if extra > 0.0:
+                        time.sleep(extra)
+                win_k += 1
                 if dst in self.dead:
                     raise DeadNode(str(dst))
                 window = src_buf.view(pos, avail)  # immutable below watermark
@@ -771,7 +852,8 @@ class LocalCluster:
         with self._stats_lock:
             self.transfers.append((src, dst, object_id))
 
-    def get_async(self, node: int, object_id: str, timeout: float = 30.0) -> Future:
+    def get_async(self, node: int, object_id: str, timeout: Optional[float] = None) -> Future:
+        timeout = self.ft.get_timeout if timeout is None else timeout
         fut: Future = Future()
 
         def run():
@@ -783,12 +865,13 @@ class LocalCluster:
         self._spawn(run)
         return fut
 
-    def prefetch_async(self, node: int, object_id: str, timeout: float = 30.0) -> Future:
+    def prefetch_async(self, node: int, object_id: str, timeout: Optional[float] = None) -> Future:
         """Land a complete local copy of ``object_id`` at ``node`` through
         the adaptive broadcast tree WITHOUT materializing an array (the
         serve fast path: weight pushes and fan-out inputs want bytes
         staged, not values returned).  Resolves to the number of bytes
         now local (0 for directory-inline small objects)."""
+        timeout = self.ft.get_timeout if timeout is None else timeout
         fut: Future = Future()
 
         def run():
@@ -819,7 +902,7 @@ class LocalCluster:
         target_id: str,
         source_ids: Sequence[str],
         op: ReduceOp = SUM,
-        timeout: float = 60.0,
+        timeout: Optional[float] = None,
         _meta: Optional[Tuple] = None,
     ) -> str:
         """Blocking chained reduce (paper section 4.3), including the 2-D
@@ -831,6 +914,7 @@ class LocalCluster:
         first byte, and the 2-D top chain admits a group the moment its
         watermark turns positive, streaming from the still-reducing
         partial instead of waiting behind a completion barrier."""
+        timeout = self.ft.reduce_timeout if timeout is None else timeout
         self._check_alive(node)
         deadline = time.time() + timeout
         if _meta is None:
@@ -891,7 +975,9 @@ class LocalCluster:
         target_id: str,
         source_ids: Sequence[str],
         op: ReduceOp = SUM,
-        timeout: float = 60.0,
+        timeout: Optional[float] = None,
+        deadline: Optional[float] = None,
+        min_participants: Optional[int] = None,
     ) -> str:
         """Fused allreduce (paper 4.3-4.4 composed): reduce into
         ``nodes[0]`` while every other node broadcast-chases the producing
@@ -899,10 +985,49 @@ class LocalCluster:
         bounded by one pipeline fill past the reduce instead of two
         serialized collectives.  ``planner.allreduce_policy`` (shared with
         the simulator) decides when fusing wins; small inline-able objects
-        fall back to reduce-then-fetch."""
-        deadline = time.time() + timeout
+        fall back to reduce-then-fetch.
+
+        **Bounded-time mode** (``deadline=`` and/or ``min_participants=``):
+        the serve path's k-of-n quorum generalized to a training
+        collective.  Wait up to ``deadline`` seconds for every source; at
+        the cut-off, as soon as at least ``min_participants`` (default
+        n-1, ``planner.bounded_time_participants``) sources are ready,
+        drop the stragglers' unfused contributions and fold only the
+        ready set -- so p99 tracks the k-th fastest participant, not the
+        slowest.  Returns an :class:`AllreduceResult` (a ``str``)
+        carrying the participation mask; the cut is recorded in stats
+        (``straggler_cuts`` / ``dropped_contributions``, plus the
+        ``straggler-cut`` stage) and as a ``straggler-cut`` trace
+        instant.  With ``deadline=None`` the fold starts the moment the
+        quorum is ready (no grace period for stragglers)."""
+        timeout = self.ft.reduce_timeout if timeout is None else timeout
+        hard_deadline = time.time() + timeout
         root = nodes[0]
         self._check_alive(root)
+        if deadline is None and min_participants is None:
+            return self._allreduce_full(
+                nodes, target_id, list(source_ids), op, hard_deadline
+            )
+        return self._allreduce_bounded(
+            nodes, target_id, list(source_ids), op, hard_deadline,
+            deadline, min_participants,
+        )
+
+    def _allreduce_full(
+        self,
+        nodes: Sequence[int],
+        target_id: str,
+        source_ids: List[str],
+        op: ReduceOp,
+        deadline: float,
+        skip_await: FrozenSet[int] = frozenset(),
+    ) -> str:
+        """The unbounded fused collective (every source folds in).
+        ``skip_await`` nodes still get the result prefetched toward them,
+        but their completion is not awaited -- bounded-time mode uses it
+        so a cut straggler's slow inbound leg cannot hold the collective
+        past the cut."""
+        root = nodes[0]
         first = self._wait_any_meta(source_ids, deadline)
         meta = self.meta[first]
         dtype, shape = meta
@@ -934,14 +1059,141 @@ class LocalCluster:
         if not policy.fused:
             red.result(timeout=max(0.0, deadline - time.time()))
         futs = [
-            self.prefetch_async(n, target_id, timeout=max(0.0, deadline - time.time()))
+            (n, self.prefetch_async(n, target_id, timeout=max(0.0, deadline - time.time())))
             for n in dict.fromkeys(nodes)
             if n != root
         ]
         red.result(timeout=max(0.0, deadline - time.time()))
-        for f in futs:
+        for n, f in futs:
+            if n in skip_await:
+                # Cut straggler: its inbound copy keeps streaming in the
+                # background (eventual delivery), but must not gate the
+                # collective.  Swallow its eventual error, if any.
+                f.add_done_callback(lambda fu: fu.exception())
+                continue
             f.result(timeout=max(0.0, deadline - time.time()))
         return target_id
+
+    def _allreduce_bounded(
+        self,
+        nodes: Sequence[int],
+        target_id: str,
+        source_ids: List[str],
+        op: ReduceOp,
+        hard_deadline: float,
+        deadline: Optional[float],
+        min_participants: Optional[int],
+    ) -> AllreduceResult:
+        """Bounded-time allreduce: wait for all sources until the soft
+        ``deadline``, then fold as soon as >= k are ready (see
+        ``allreduce``).  Sources that can NEVER arrive (lost/failed) do
+        not count toward the quorum; if fewer than k can ever arrive the
+        collective raises ObjectLost rather than folding below quorum."""
+        root = nodes[0]
+        k = bounded_time_participants(len(source_ids), min_participants)
+        cut_ts = hard_deadline if deadline is None else min(
+            hard_deadline, time.time() + deadline
+        )
+
+        def ready_ids() -> List[str]:
+            """Sources whose bytes are foldable NOW (inline entry or a
+            COMPLETE copy at a live node).  Caller holds the dir lock."""
+            ready = []
+            for oid in source_ids:
+                if self.directory.get_inline(oid) is not None:
+                    ready.append(oid)
+                    continue
+                if any(
+                    l.progress is Progress.COMPLETE and l.node not in self.dead
+                    for l in self.directory.locations(oid)
+                ):
+                    ready.append(oid)
+            return ready
+
+        def check_quorum_reachable(ready: List[str]) -> None:
+            arrivable = sum(
+                1
+                for oid in source_ids
+                if oid in ready or not self._object_lost(oid)
+            )
+            if arrivable < k:
+                raise ObjectLost(
+                    f"allreduce {target_id}: only {arrivable}/{len(source_ids)}"
+                    f" contributions can ever arrive (quorum k={k})"
+                )
+
+        def attempt_all():
+            ready = ready_ids()
+            if len(ready) == len(source_ids):
+                return ready
+            check_quorum_reachable(ready)
+            return None
+
+        def attempt_quorum():
+            ready = ready_ids()
+            if len(ready) >= k:
+                return ready
+            check_quorum_reachable(ready)
+            return None
+
+        sc = StageClock(self._stats, self.trace, root, target_id,
+                        stage=STAGE_PRODUCER_WAIT)
+        try:
+            if deadline is None:
+                # No grace period: fold the moment the quorum is ready.
+                sc.switch(STAGE_STRAGGLER_CUT)
+                ready = self._await_directory(
+                    source_ids, attempt_quorum, cut_ts,
+                    what=f"allreduce {target_id}: quorum of {k} never ready",
+                )
+            else:
+                try:
+                    ready = self._await_directory(
+                        source_ids, attempt_all, cut_ts,
+                        what=f"allreduce {target_id} soft deadline",
+                    )
+                except TimeoutError:
+                    # Soft deadline hit with stragglers outstanding: now
+                    # wait (only) for the k-of-n quorum, against the hard
+                    # deadline.  Time spent here is the cut's cost and is
+                    # attributed to the straggler-cut stage.
+                    sc.switch(STAGE_STRAGGLER_CUT)
+                    ready = self._await_directory(
+                        source_ids, attempt_quorum, hard_deadline,
+                        what=f"allreduce {target_id}: quorum of {k} never ready",
+                    )
+        finally:
+            sc.close()
+
+        ready_set = set(ready)
+        chosen = [oid for oid in source_ids if oid in ready_set]
+        dropped = [oid for oid in source_ids if oid not in ready_set]
+        mask = tuple(oid in ready_set for oid in source_ids)
+        if dropped:
+            self._stats.straggler_cuts += 1
+            self._stats.dropped_contributions += len(dropped)
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_CHAIN, "straggler-cut", root, target_id,
+                    kept=len(chosen), dropped=list(dropped), k=k,
+                )
+        # When nodes pair 1:1 with sources (the SPMD layout), a dropped
+        # source marks its node a straggler: the result still streams
+        # toward it, but the collective stops waiting on it.
+        skip: FrozenSet[int] = frozenset()
+        if dropped and len(nodes) == len(source_ids):
+            skip = frozenset(
+                n
+                for n, oid in zip(nodes, source_ids)
+                if oid not in ready_set and n != root
+            )
+        self._allreduce_full(
+            nodes, target_id, chosen, op, hard_deadline, skip_await=skip
+        )
+        return AllreduceResult(
+            target_id, participants=chosen, dropped=dropped, mask=mask,
+            cut=bool(dropped),
+        )
 
     def _reduce_async(self, node, target_id, source_ids, op, deadline, meta=None) -> Future:
         fut: Future = Future()
@@ -1219,11 +1471,13 @@ class LocalCluster:
         else:
             src_node, src_buf = None, None
         need_rebuild = False
+        rebuild_avoid: FrozenSet[int] = frozenset()
         while True:
             if need_rebuild:
-                # Tail died / was abandoned mid-stream: re-splice -- fold
-                # resumes from the target's own watermark below, with a
-                # replacement rebuilt from still-live copies.
+                # Tail died / was abandoned / stalled mid-stream:
+                # re-splice -- fold resumes from the target's own
+                # watermark below, with a replacement rebuilt from
+                # still-live copies (stalled holders soft-avoided).
                 self._stats.resplices += 1
                 sc.switch(STAGE_RESPLICE)
                 if self.trace.enabled:
@@ -1232,7 +1486,8 @@ class LocalCluster:
                         rebuilt=final.src_object, at=out.bytes_present,
                     )
                 src_node, src_buf = node, self._rebuild_partial(
-                    node, final.src_object, chain.lineage, dtype, shape, op, deadline
+                    node, final.src_object, chain.lineage, dtype, shape, op,
+                    deadline, avoid=rebuild_avoid,
                 )
                 need_rebuild = False
             inputs: List[Tuple[ChunkedBuffer, str, Optional[int]]] = []
@@ -1253,6 +1508,10 @@ class LocalCluster:
                     node, inputs, out, dtype, op, deadline,
                     object_id=target_id, start=out.bytes_present,
                     publish_progress=True, stage=sc,
+                    stall_rebuildable=(
+                        final is not None
+                        and chain.lineage.get(final.src_object) is not None
+                    ),
                 )
                 break
             except DeadNode as e:
@@ -1263,6 +1522,21 @@ class LocalCluster:
                 if final is None:
                     raise ObjectLost(target_id)
                 need_rebuild = True
+            except SourceStalled as e:
+                # The tail wedged (not died) past the stall budget: evict
+                # it and re-splice from lineage / a live copy elsewhere,
+                # resuming from the target watermark.
+                if final is None:
+                    raise ObjectLost(target_id)
+                self._stats.stall_replans += 1
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_CHAIN, "replan", node, target_id,
+                        reason="source-stalled", src=e.node,
+                    )
+                need_rebuild = True
+                if e.node is not None:
+                    rebuild_avoid = frozenset({e.node})
             finally:
                 if epoch is not None:
                     with self._dir_lock:
@@ -1388,6 +1662,7 @@ class LocalCluster:
                         src=hop.src_node, src_object=hop.src_object,
                     )
                 src_node = hop.src_node
+                rebuild_avoid: FrozenSet[int] = frozenset()
                 while True:
                     if need_rebuild:
                         self._stats.resplices += 1
@@ -1400,7 +1675,7 @@ class LocalCluster:
                             )
                         src_buf = self._rebuild_partial(
                             hop.dst_node, hop.src_object, lineage,
-                            dtype, shape, op, deadline,
+                            dtype, shape, op, deadline, avoid=rebuild_avoid,
                         )
                         src_node = hop.dst_node
                         need_rebuild = False
@@ -1428,6 +1703,8 @@ class LocalCluster:
                             object_id=hop.out_object,
                             start=out.bytes_present,
                             stage=sc,
+                            stall_rebuildable=lineage.get(hop.src_object)
+                            is not None,
                         )
                         break
                     except DeadNode as e:
@@ -1436,6 +1713,20 @@ class LocalCluster:
                         need_rebuild = True  # re-splice from out watermark
                     except StaleBuffer:
                         need_rebuild = True
+                    except SourceStalled as e:
+                        # Wedged upstream partial: evict, re-splice from
+                        # lineage / another live copy, resume the fold
+                        # from this hop's own output watermark.
+                        self._stats.stall_replans += 1
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_CHAIN, "replan", hop.dst_node,
+                                hop.out_object, reason="source-stalled",
+                                src=e.node,
+                            )
+                        need_rebuild = True
+                        if e.node is not None:
+                            rebuild_avoid = frozenset({e.node})
                     finally:
                         if epoch is not None:
                             with self._dir_lock:
@@ -1474,6 +1765,7 @@ class LocalCluster:
         start: int = 0,
         publish_progress: bool = False,
         stage: Optional[StageClock] = None,
+        stall_rebuildable: bool = False,
     ):
         """out[w] = fold(op, inputs[0][w], inputs[1][w], ...) window-by-
         window, gated on EVERY input's watermark -- the streaming add of a
@@ -1487,6 +1779,13 @@ class LocalCluster:
         caller re-splices); a failed local input raises ObjectLost.
         ``start`` resumes a re-spliced fold from the output watermark --
         bytes below it were folded from identical prefixes and are final.
+
+        Raises SourceStalled when a REMOTE input's watermark stops
+        advancing past the stall budget while recovery is possible:
+        ``stall_rebuildable`` means the caller can re-splice that input
+        from its chain lineage; otherwise a live copy of the input
+        elsewhere must exist.  A stalled local-only fold just waits (its
+        producer is this node; there is nothing to evict).
         """
         itemsize = np.dtype(dtype).itemsize
         pos = start
@@ -1497,6 +1796,8 @@ class LocalCluster:
         served: Dict[int, int] = {}
         reduced = 0
         first_pub = pos == 0
+        last_advance = time.time()
+        win_k = 0  # window ordinal (keys the injector's pure jitter draws)
         leg_t0 = self.trace.clock() if self.trace.enabled else None
         try:
             while pos < total:
@@ -1508,7 +1809,9 @@ class LocalCluster:
                     stage.switch(STAGE_PRODUCER_WAIT)
                 avail = total
                 for buf, oid, src in inputs:
-                    got = buf.wait_for_bytes(pos + 1, timeout=_WATERMARK_RECHECK_S)
+                    got = buf.wait_for_bytes(
+                        pos + 1, timeout=self.ft.watermark_recheck_s
+                    )
                     if dst in self.dead:
                         raise DeadNode(str(dst))
                     if src is not None:
@@ -1520,7 +1823,27 @@ class LocalCluster:
                         raise ObjectLost(oid)
                     avail = min(avail, got)
                 if avail <= pos:
+                    # No input advanced: a remote upstream may be wedged
+                    # (not dead).  Past the stall budget, evict it and let
+                    # the caller re-splice -- today only death/staleness
+                    # interrupt a fold, so a straggling upstream would
+                    # otherwise hold this hop until the hard deadline.
+                    if time.time() - last_advance >= self.ft.stall_timeout:
+                        culprit = self._fold_stalled_input(
+                            dst, inputs, pos, stall_rebuildable
+                        )
+                        if culprit is not None:
+                            c_src, c_oid = culprit
+                            if self.trace.enabled:
+                                self.trace.instant(
+                                    CAT_STREAM, "watermark-stall", dst,
+                                    c_oid, src=c_src, at=pos,
+                                )
+                            raise SourceStalled(
+                                f"{c_oid}@{c_src}", node=c_src, object_id=c_oid
+                            )
                     continue
+                last_advance = time.time()
                 if stage is not None:
                     stage.switch(STAGE_STREAMING)
                 if self.pace:
@@ -1528,6 +1851,21 @@ class LocalCluster:
                     time.sleep(self.pace)
                 else:
                     avail = min(avail, pos + window_cap)
+                if self.faults is not None:
+                    # Injected noise on the fold's inbound legs: take the
+                    # WORST penalty across remote inputs (the fold cannot
+                    # outrun its slowest feed); a local-only fold models
+                    # the receiver's own compute slowdown via (dst, dst).
+                    base = self.pace or (avail - pos) / self.link.bandwidth
+                    extra = max(
+                        self.faults.window_penalty(
+                            src if src is not None else dst, dst, win_k, base
+                        )
+                        for _buf, _oid, src in inputs
+                    )
+                    if extra > 0.0:
+                        time.sleep(extra)
+                win_k += 1
                 acc = inputs[0][0].view(pos, avail).view(dtype)
                 for buf, _oid, _src in inputs[1:]:
                     acc = op(acc, buf.view(pos, avail).view(dtype))
@@ -1566,8 +1904,30 @@ class LocalCluster:
                     resume_from=start,
                 )
 
+    def _fold_stalled_input(
+        self, dst: int, inputs, pos: int, rebuildable: bool
+    ) -> Optional[Tuple[int, str]]:
+        """Identify which remote fold input is wedging the fold at ``pos``
+        -- and only if evicting it can actually help: the caller either
+        re-splices it from lineage (``rebuildable``) or another live copy
+        of it exists.  Returns (src_node, object_id) or None (keep
+        waiting)."""
+        for buf, oid, src in inputs:
+            if src is None or buf.bytes_present > pos or buf.complete:
+                continue
+            if rebuildable:
+                return src, oid
+            with self._dir_lock:
+                if any(
+                    l.node not in (src, dst) and l.node not in self.dead
+                    for l in self.directory.locations(oid)
+                ):
+                    return src, oid
+        return None
+
     def _rebuild_partial(
-        self, node, object_id, lineage, dtype, shape, op, deadline
+        self, node, object_id, lineage, dtype, shape, op, deadline,
+        avoid: FrozenSet[int] = frozenset(),
     ) -> ChunkedBuffer:
         """Re-splice support: reconstruct a lost chain partial at ``node``
         from still-live state, byte-identical to the original.
@@ -1579,13 +1939,22 @@ class LocalCluster:
         hop used -- so the replacement's bytes match the lost partial's
         exactly and the resumed fold stays consistent with the prefix
         already in the output.  Raises ObjectLost when a contribution's
-        every copy died with its node (framework recovery owns that)."""
+        every copy died with its node (framework recovery owns that).
+
+        ``avoid`` soft-deprioritizes copies at nodes the caller stalled
+        on (SourceStalled eviction): any other live copy, inline entry,
+        or lineage rebuild wins first, but a stalled copy is still used
+        as the last resort -- a slow rebuild beats a lost object.  A copy
+        that stalls DURING the rebuild stream joins the avoid set and the
+        scan re-runs, so a replica published mid-rebuild gets picked up."""
+        avoid_set = set(avoid)
 
         def rebuild(oid: str) -> ChunkedBuffer:
             while True:
                 if time.time() > deadline:
                     raise TimeoutError(f"re-splice rebuild of {oid} timed out")
                 src = None
+                avoided = None
                 with self._dir_lock:
                     for l in self.directory.locations(oid):
                         if l.node in self.dead:
@@ -1594,9 +1963,15 @@ class LocalCluster:
                         if buf is None or buf.failed:
                             continue
                         if l.progress is Progress.COMPLETE or l.producing:
+                            if l.node in avoid_set:
+                                if avoided is None:
+                                    avoided = (l.node, buf)
+                                continue
                             src = (l.node, buf)
                             break
                     inline = self.directory.get_inline(oid)
+                if src is None and inline is None and lineage.get(oid) is None:
+                    src = avoided  # stalled copy beats ObjectLost
                 if src is not None:
                     src_node, src_buf = src
                     if src_node == node:
@@ -1608,7 +1983,7 @@ class LocalCluster:
                             if time.time() > deadline:
                                 raise TimeoutError(f"re-splice rebuild of {oid} timed out")
                             src_buf.wait_for_bytes(
-                                src_buf.size, timeout=_WATERMARK_RECHECK_S
+                                src_buf.size, timeout=self.ft.watermark_recheck_s
                             )
                         if src_buf.failed:
                             continue
@@ -1620,6 +1995,13 @@ class LocalCluster:
                         self._stream_copy(src_node, node, src_buf, staging, oid)
                     except (DeadNode, StaleBuffer):
                         continue  # that copy died too; re-scan / recurse
+                    except SourceStalled:
+                        # The rebuild source wedged as well: deprioritize
+                        # it and re-scan -- a copy published since (or the
+                        # lineage pair) takes over.
+                        avoid_set.add(src_node)
+                        self._stats.stall_replans += 1
+                        continue
                     return staging
                 if inline is not None:
                     return ChunkedBuffer.from_array(np.asarray(inline))

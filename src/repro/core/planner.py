@@ -309,3 +309,14 @@ def broadcast_policy(
     if t_pipe <= t_bin:
         return BroadcastPolicy("pipelined", 1 if egress_sharing else 2)
     return BroadcastPolicy("binomial", max(2, math.ceil(math.log2(n + 1))))
+
+
+def bounded_time_participants(n: int, min_participants=None) -> int:
+    """Participation quorum k for a bounded-time allreduce over ``n``
+    contributions.  Default is k = n - 1 -- tolerate exactly one
+    straggler, the dominant cloud tail shape (OptiReduce's observation:
+    p99 is set by the single slowest participant, and dropping one
+    contribution bounds the gradient-staleness cost at 1/n).  Clamped to
+    [1, n]; k = n degenerates to the unbounded collective."""
+    k = (n - 1) if min_participants is None else int(min_participants)
+    return max(1, min(n, k))

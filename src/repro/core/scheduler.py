@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.api import Location, Progress
 
@@ -43,6 +43,7 @@ def select_source(
     min_lead: int = 0,
     max_out_degree: Optional[int] = None,
     tick: int = 0,
+    avoid: FrozenSet[int] = frozenset(),
 ) -> Optional[Location]:
     """Least-loaded feasible source for one receiver-driven fetch.
 
@@ -57,9 +58,13 @@ def select_source(
     sheds post-storm requests onto first-generation receivers instead of
     being recycled the moment its slots free -- then COMPLETE copies,
     then a rotating counter so repeated broadcasts spread across
-    equally-placed holders.  Returns None when every feasible source is
-    at its cap (the caller waits for a slot) or no candidate is feasible
-    yet (the caller waits for a watermark).
+    equally-placed holders.  ``avoid`` is a *soft* penalty, not a
+    feasibility filter: nodes the receiver already stalled on sort after
+    every other feasible candidate but can still be picked when nothing
+    else exists -- eviction must never turn a slow fetch into a stuck
+    one.  Returns None when every feasible source is at its cap (the
+    caller waits for a slot) or no candidate is feasible yet (the caller
+    waits for a watermark).
     """
     served = served or {}
     feasible = [
@@ -74,6 +79,7 @@ def select_source(
     return min(
         feasible,
         key=lambda l: (
+            l.node in avoid,
             loads.get(l.node, 0),
             served.get(l.node, 0),
             l.progress is not Progress.COMPLETE,

@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.api import SMALL_OBJECT_THRESHOLD, Progress
 from repro.core.directory import ObjectDirectory
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.planner import (
     LinkSpec,
     EC2_LINK,
@@ -248,12 +249,21 @@ class Node:
 class SimCluster:
     """Substrate shared by Hoplite and the baselines."""
 
-    def __init__(self, spec: ClusterSpec = ClusterSpec(), trace: bool = False):
+    def __init__(self, spec: ClusterSpec = ClusterSpec(), trace: bool = False,
+                 faults=None):
         self.spec = spec
         self.sim = Simulator()
         self.nodes = [Node(self.sim, i) for i in range(spec.num_nodes)]
         self.directory = ObjectDirectory()
         self.bytes_on_wire = 0
+        # Fault-injection plane (core/faults): the SAME FaultPlan schema
+        # the threaded cluster consumes, applied here per chunk -- link
+        # jitter adds propagation latency, bandwidth degradation and
+        # straggler slowdown stretch egress service.  Kills on the plan
+        # timeline are armed via ``injector.apply_to_sim(self)``.
+        if faults is not None and isinstance(faults, FaultPlan):
+            faults = FaultInjector(faults)
+        self.faults: Optional[FaultInjector] = faults
         # Same flight-recorder schema as the threaded plane, on simulated
         # time: spans/instants carry ``sim.now`` so a simulated transfer
         # storm opens in Perfetto exactly like a threaded one.
@@ -333,9 +343,17 @@ class SimCluster:
                 if extra_gate is not None:
                     yield extra_gate.wait_bytes(upto)
                 this = upto - k * csize
-                yield self.nodes[src].egress.serve(this / spec.link.bandwidth)
+                svc = this / spec.link.bandwidth
+                lat = spec.link.latency
+                if self.faults is not None:
+                    extra_lat, bw = self.faults.chunk_factors(
+                        src, dst, k, now=self.sim.now
+                    )
+                    svc /= max(bw, 1e-9)
+                    lat += extra_lat
+                yield self.nodes[src].egress.serve(svc)
                 # propagation: fire-and-forget so latency overlaps next chunk
-                self.sim.schedule(spec.link.latency, deliver, k, upto)
+                self.sim.schedule(lat, deliver, k, upto)
 
         self.sim.process(driver())
         return done

@@ -83,6 +83,9 @@ class DataPlaneStats:
         "dir_wakeups",
         "windows",
         "resplices",
+        "stall_replans",
+        "straggler_cuts",
+        "dropped_contributions",
         "bytes_served",
         "peak_outbound",
         "bytes_reduced",
@@ -105,6 +108,9 @@ class DataPlaneStats:
         self.dir_wakeups = 0
         self.windows = 0
         self.resplices = 0
+        self.stall_replans = 0
+        self.straggler_cuts = 0
+        self.dropped_contributions = 0
         self.bytes_served: Dict[int, int] = {}
         self.peak_outbound: Dict[int, int] = {}
         self.bytes_reduced: Dict[int, int] = {}

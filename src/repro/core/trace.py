@@ -61,6 +61,9 @@ STAGE_CAP_BLOCKED = "cap-blocked"      # feasible sources exist but all sit
 STAGE_STREAMING = "streaming"          # bytes moving (copy or fold windows)
 STAGE_REPLAN = "replan"                # re-planning after a failed leg
 STAGE_RESPLICE = "resplice"            # rebuilding a lost chain partial
+STAGE_STRAGGLER_CUT = "straggler-cut"  # bounded-time allreduce: waiting past
+#                                        the soft deadline for the k-of-n
+#                                        participation quorum
 
 STAGES = (
     STAGE_PLAN,
@@ -69,6 +72,7 @@ STAGES = (
     STAGE_STREAMING,
     STAGE_REPLAN,
     STAGE_RESPLICE,
+    STAGE_STRAGGLER_CUT,
 )
 
 # -- event categories -------------------------------------------------------
@@ -79,8 +83,10 @@ CAT_DIRECTORY = "directory"  # select_source / release_source / cap-blocked
 CAT_CHAIN = "chain"          # reduce hops, chain folds, re-splices
 CAT_STAGE = "stage"          # stage-attribution spans (critical path)
 CAT_SERVE = "serve"          # router / request lifecycle
+CAT_FAULT = "fault"          # injected faults (kills, restarts, slow onsets)
 
-CATEGORIES = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE, CAT_SERVE)
+CATEGORIES = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE,
+              CAT_SERVE, CAT_FAULT)
 
 # pid lane for serving-plane events (data-plane nodes are >= 0)
 NODE_ROUTER = -1

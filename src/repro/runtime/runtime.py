@@ -81,8 +81,12 @@ class Runtime:
         executors_per_node: int = 2,
         cluster: Optional[LocalCluster] = None,
         seed: int = 0,
+        fault_tolerance=None,  # core.faults.FaultToleranceConfig
+        faults=None,  # core.faults.FaultPlan / FaultInjector
     ):
-        self.cluster = cluster or LocalCluster(num_nodes)
+        self.cluster = cluster or LocalCluster(
+            num_nodes, fault_tolerance=fault_tolerance, faults=faults
+        )
         self.num_nodes = self.cluster.num_nodes
         self._rng = np.random.RandomState(seed)
         self._rr = itertools.count()
