@@ -32,6 +32,13 @@ ensemble serving) blocks on.  It is the source of the tracked
     straggler); tracked runs assert bounded-time mode
     (``deadline=, min_participants=7``) holds p99 <= 1.5x the no-noise
     baseline while the unbounded arm rides the straggler (>= 2.5x).
+  * ``elastic_serving`` -- the elastic-membership acceptance scenario: a
+    seeded load spike against a 3-replica ensemble, fixed fleet (rides
+    rejections) vs queue-driven autoscaler (joins nodes through
+    ``Runtime.add_node`` + broadcast weight staging, drains them back
+    out after the spike); tracked runs assert autoscaled p99 <= 2x the
+    fixed fleet's while shedding <= 0.6x its rejections, with the fleet
+    drained home and zero failed requests.
 
 Besides wall-clock, every scenario reports *contention counters*:
 
@@ -731,6 +738,168 @@ def provenance():
     return info
 
 
+def bench_elastic_serving(nbytes, chunk_size, strict=True, rounds=None):
+    """Elastic-membership acceptance scenario (ISSUE 8): a seeded load
+    spike against a 3-replica ensemble, two arms per round back-to-back
+    so container noise is common-mode:
+
+      * ``fixed``      -- the seed fleet rides the spike by shedding load
+        (replica-queue rejections);
+      * ``autoscaled`` -- a :class:`QueueAutoscaler` grows the fleet off
+        the rejection/queue-depth signal (joins ride ``Runtime.add_node``
+        + weight staging through the broadcast tree) and gives the extra
+        nodes back via ``drain_node`` once the spike passes.
+
+    Arrivals are seeded per round and identical across arms, so the churn
+    the autoscaler produces is a deterministic function of load, not of
+    the wall clock.  Structural invariants at any payload: the spike
+    actually overloads the fixed fleet (rejections > 0), the autoscaler
+    scaled up at least once and drained back down to the seed fleet with
+    zero failed requests and zero object loss (service answers after the
+    churn), and ``offered == completed + rejected + failed`` exactly in
+    both arms.  Tracked runs (strict, full payload) additionally gate the
+    elasticity win: autoscaled p99 <= 2x fixed p99 while shedding <= 0.6x
+    the fixed arm's rejections.
+    """
+    from repro.runtime import Runtime
+    from repro.serve import (
+        AutoscalerConfig, EnsembleConfig, EnsembleGroup, OpenLoopRouter,
+        QueueAutoscaler, RouterConfig,
+    )
+
+    rounds = rounds if rounds is not None else (2 if nbytes >= 4 * MB else 1)
+    service_s = 0.03
+    seed_nodes = 3
+    warm_n, spike_n = 8, 120
+    warm_rps, spike_rps = 20.0, 150.0
+    # Fixed-fleet capacity: 3 replicas x depth 2 = 6 slots, 2 slots per
+    # request (max_fanout) held ~service_s => ~100 rps; the 150 rps spike
+    # overloads it, and each autoscaled replica adds ~33 rps.
+
+    def one(autoscale, rnd):
+        rt = Runtime(num_nodes=seed_nodes, executors_per_node=4)
+
+        def model(w, x):
+            time.sleep(service_s)
+            return x * float(np.asarray(w).ravel()[0])
+
+        ens = EnsembleGroup(
+            rt, model_fn=model,
+            config=EnsembleConfig(
+                num_replicas=seed_nodes, quorum=2, max_fanout=2,
+                replica_queue_depth=2, request_timeout_s=60.0,
+            ),
+        )
+        snap = attach_counters(rt.cluster)
+        weights = np.random.RandomState(900 + rnd).rand(max(1024, nbytes // 8))
+        weights[0] = 2.0
+        ens.deploy(weights)
+        router = OpenLoopRouter(
+            ens, RouterConfig(rate_rps=spike_rps, max_outstanding=256),
+            ens.metrics,
+        )
+        sc = None
+        if autoscale:
+            sc = QueueAutoscaler(
+                rt, ens, metrics=ens.metrics,
+                config=AutoscalerConfig(
+                    min_replicas=seed_nodes, max_replicas=6,
+                    scale_up_queue_depth=1.5, scale_down_queue_depth=0.25,
+                    scale_up_rejection_rate=1, hysteresis_s=0.15,
+                    retire_wait_s=5.0, drain_deadline_s=15.0,
+                ),
+            )
+        rng = np.random.RandomState(1000 + rnd)  # same stream both arms
+        gaps = (
+            [rng.exponential(1.0 / warm_rps) for _ in range(warm_n)]
+            + [rng.exponential(1.0 / spike_rps) for _ in range(spike_n)]
+        )
+        t0 = time.perf_counter()
+        next_t = 0.0
+        for idx, gap in enumerate(gaps):
+            next_t += gap
+            sleep = t0 + next_t - time.perf_counter()
+            if sleep > 0:
+                time.sleep(sleep)  # open loop: never waits on completions
+            router.dispatch(idx, np.full(128, float(idx)))
+            if sc is not None:
+                sc.tick()
+        router.drain(timeout=120.0)
+        dt = time.perf_counter() - t0
+        if sc is not None:
+            # Cooldown: tick until the give-back drains the fleet home.
+            end = time.time() + 15.0
+            while rt.num_nodes > seed_nodes and time.time() < end:
+                sc.tick()
+                time.sleep(0.05)
+        # Zero-object-loss probe: the service still answers after churn.
+        value = ens.handle_request(np.full(8, 3.0))
+        np.testing.assert_allclose(value, np.full(8, 6.0))
+        m = ens.metrics.snapshot()
+        m["offered"] -= 1  # exclude the probe from the arm accounting
+        m["completed"] -= 1
+        return dt, m, snap(), sc, rt
+
+    arm_metrics = {"fixed": [], "autoscaled": []}
+    counters = {}
+    actions = []
+    dts = []
+    for rnd in range(rounds):
+        _dtf, mf, _cf, _scf, _rtf = one(False, rnd)
+        dta, ma, ca, sca, rta = one(True, rnd)
+        for arm, m in (("fixed", mf), ("autoscaled", ma)):
+            assert m["offered"] == m["completed"] + m["rejected"] + m["failed"], (
+                arm, m,
+            )
+            assert m["failed"] == 0, (arm, m)
+        assert mf["rejected"] > 0, (
+            "spike did not overload the fixed fleet -- no elasticity signal"
+        )
+        ups = [a for a in sca.actions if a[1] == "scale-up"]
+        downs = [a for a in sca.actions if a[1] == "scale-down"]
+        assert ups, "autoscaler never scaled up under the spike"
+        assert downs, "autoscaler never gave capacity back after the spike"
+        assert rta.num_nodes == seed_nodes, (
+            f"drain did not return the fleet to {seed_nodes} nodes"
+        )
+        assert rta.cluster.stats["drains"] >= 1
+        arm_metrics["fixed"].append(mf)
+        arm_metrics["autoscaled"].append(ma)
+        counters = ca
+        actions.append([list(a) for a in sca.actions])
+        dts.append(dta)
+
+    def _tot(arm, key):
+        return sum(m[key] for m in arm_metrics[arm])
+
+    fixed_lat = arm_metrics["fixed"][-1]["latency"]
+    auto_lat = arm_metrics["autoscaled"][-1]["latency"]
+    extras = {
+        "latency": auto_lat,
+        "arm_latency": {"fixed": fixed_lat, "autoscaled": auto_lat},
+        "fixed_rejected": _tot("fixed", "rejected"),
+        "autoscaled_rejected": _tot("autoscaled", "rejected"),
+        "completed": {a: _tot(a, "completed") for a in arm_metrics},
+        "scale_actions": actions,
+        "service_s": service_s,
+        "spike_rps": spike_rps,
+        "requests": warm_n + spike_n,
+        "rounds": rounds,
+    }
+    if strict and nbytes >= 4 * MB:
+        assert auto_lat["p99"] <= 2.0 * fixed_lat["p99"], (
+            f"autoscaled p99 {auto_lat['p99']:.4f}s exceeds 2x the fixed "
+            f"fleet's {fixed_lat['p99']:.4f}s"
+        )
+        assert extras["autoscaled_rejected"] <= 0.6 * extras["fixed_rejected"], (
+            f"autoscaling shed {extras['autoscaled_rejected']} requests vs "
+            f"{extras['fixed_rejected']} fixed -- the joiners added no capacity"
+        )
+    dt = min(dts)
+    moved = int(sum(rta.cluster.bytes_sent_per_node))
+    return dt, moved, counters, extras
+
+
 SCENARIOS = [
     ("p2p", bench_p2p),
     ("broadcast", bench_broadcast),
@@ -740,6 +909,7 @@ SCENARIOS = [
     ("broadcast_scaling", bench_broadcast_scaling),
     ("allreduce_scaling", bench_allreduce_scaling),
     ("noisy_allreduce", bench_noisy_allreduce),
+    ("elastic_serving", bench_elastic_serving),
 ]
 
 
@@ -751,7 +921,10 @@ def run_suite(quick: bool = False, strict: bool = True):
     for name, fn in SCENARIOS:
         kwargs = (
             {"strict": strict}
-            if name in ("broadcast_scaling", "allreduce_scaling", "noisy_allreduce")
+            if name in (
+                "broadcast_scaling", "allreduce_scaling", "noisy_allreduce",
+                "elastic_serving",
+            )
             else {}
         )
         out = fn(nbytes, chunk_size, **kwargs)

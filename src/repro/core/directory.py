@@ -86,6 +86,11 @@ class ObjectDirectory:
         # (and cleared) when the node frees a slot.  Targeted registry so
         # release_source never has to scan the subscriber tables.
         self._cap_blocked: Dict[int, set] = {}
+        # Nodes winding down before a planned departure (drain_node):
+        # select_source soft-avoids them like stalled holders so fresh
+        # receivers shed onto staying nodes while in-flight transfers
+        # finish naturally.
+        self._draining: set = set()
         # Optional core.trace.FlightRecorder, attached by the owning
         # cluster (never by replicas -- mirrored mutations must not
         # double-record).  Checked as `enabled` before any event cost.
@@ -212,6 +217,11 @@ class ObjectDirectory:
             for l in locs.values()
             if l.node != exclude and l.node not in dead
         ]
+        if self._draining:
+            # Draining holders lose every tie (soft avoidance, same
+            # mechanism as stalled sources) but stay pickable when they
+            # hold the only copy.
+            avoid = frozenset(avoid) | self._draining
         self._tick += 1
         served = shard.sends.get(object_id, {})
         chosen = _scheduler.select_source(
@@ -301,6 +311,53 @@ class ObjectDirectory:
 
     def outbound_load(self, node: int) -> int:
         return self._outbound.get(node, 0)
+
+    # -- elastic membership --------------------------------------------------
+
+    def set_draining(self, node: int, draining: bool = True) -> None:
+        """Mark/unmark a node as winding down: ``select_source`` soft-
+        avoids its copies from now on (they lose every tie but remain
+        pickable as the sole source)."""
+        if draining:
+            self._draining.add(node)
+        else:
+            self._draining.discard(node)
+
+    def is_draining(self, node: int) -> bool:
+        return node in self._draining
+
+    def objects_at(self, node: int) -> List[str]:
+        """Every object id with a location at ``node`` -- the drain
+        evacuation's work list.  Checked-out copies count too: a copy
+        serving as a broadcast source is withheld from ``locations`` for
+        the duration of the stream, and under load that is exactly when
+        drain runs."""
+        out = []
+        for shard in self.shards:
+            for object_id, locs in shard.locations.items():
+                if node in locs:
+                    out.append(object_id)
+            for object_id, locs in shard.checked_out.items():
+                if node in locs and object_id not in out:
+                    out.append(object_id)
+        return out
+
+    def sole_holder(self, object_id: str, node: int) -> bool:
+        """True when ``node`` holds the only COMPLETE copy (no inline
+        cache, no other complete live or checked-out location): losing it
+        would lose the object.  Partial receiver copies elsewhere do NOT
+        count -- a partial can only finish by pulling its remaining bytes
+        from a copy whose watermark leads it, so once the last complete
+        copy dies the whole partial cohort is stuck (this is exactly the
+        race drain evacuation must not lose against in-flight fetches)."""
+        shard = self._shard(object_id)
+        if object_id in shard.inline:
+            return False
+        for pool in (shard.locations, shard.checked_out):
+            for n, loc in pool.get(object_id, {}).items():
+                if n != node and loc.progress is Progress.COMPLETE:
+                    return False
+        return True
 
     def checkout_location(
         self, object_id: str, *, remove: bool = True, exclude: Optional[int] = None
@@ -451,6 +508,7 @@ class ObjectDirectory:
         # bump its charge epoch so late releases from its old streams
         # cannot free slots charged by post-restart streams.
         self.reset_outbound(node)
+        self._draining.discard(node)
         for shard in self.shards:
             for object_id in list(shard.locations.keys()):
                 dropped = shard.locations[object_id].pop(node, None) is not None
@@ -509,6 +567,10 @@ class ReplicatedDirectory(ObjectDirectory):
     def drop_location(self, object_id, node):
         super().drop_location(object_id, node)
         self._mirror("drop_location", object_id, node)
+
+    def set_draining(self, node, draining=True):
+        super().set_draining(node, draining)
+        self._mirror("set_draining", node, draining)
 
     def fail_node(self, node):
         orphaned = super().fail_node(node)

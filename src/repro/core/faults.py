@@ -153,6 +153,26 @@ class RestartSpec:
     at: float
 
 
+@dataclasses.dataclass(frozen=True)
+class JoinSpec:
+    """``node`` joins the cluster (``add_node``) at ``at`` seconds --
+    elastic-membership churn in the same deterministic-replay schema as
+    kills/restarts."""
+
+    node: int
+    at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainSpec:
+    """``node`` begins a planned drain (``drain_node(deadline=)``) at
+    ``at`` seconds: evacuate sole copies, then leave membership."""
+
+    node: int
+    at: float
+    deadline: float = 10.0
+
+
 @dataclasses.dataclass
 class FaultPlan:
     """One seeded fault campaign, shared verbatim by both planes."""
@@ -162,6 +182,9 @@ class FaultPlan:
     stragglers: List[StragglerSpec] = dataclasses.field(default_factory=list)
     kills: List[KillSpec] = dataclasses.field(default_factory=list)
     restarts: List[RestartSpec] = dataclasses.field(default_factory=list)
+    # Elastic-membership churn (PR 8): planned joins and drains.
+    joins: List[JoinSpec] = dataclasses.field(default_factory=list)
+    drains: List[DrainSpec] = dataclasses.field(default_factory=list)
     # Fractional jitter on simulated per-node compute (compute_delay).
     compute_jitter: float = 0.2
 
@@ -180,11 +203,20 @@ class FaultPlan:
         bandwidth_factor: float = 1.0,
         straggler_nodes: Tuple[int, ...] = (),
         straggler_factor: float = 4.0,
+        join_nodes: Tuple[int, ...] = (),
+        drain_nodes: Tuple[int, ...] = (),
+        drain_deadline: float = 10.0,
     ) -> "FaultPlan":
         """Derive a random storm from one seed: kill times, flakiness and
         restart delays all come from ``random.Random(seed)``, so equal
         (seed, arguments) produce equal plans -- the deterministic-replay
-        contract the chaos tests assert."""
+        contract the chaos tests assert.
+
+        ``join_nodes``/``drain_nodes`` add elastic-membership churn: each
+        named node gets a seeded join/drain time.  Their draws come AFTER
+        every kill/restart draw, so enabling churn never perturbs the
+        kill sequence of an existing seed (and churn-off plans stay
+        byte-identical to pre-churn ones)."""
         rng = random.Random(seed)
         victims = list(victims if victims is not None else range(1, num_nodes))
         link_faults = (
@@ -211,12 +243,24 @@ class FaultPlan:
                 restart_specs.append(
                     RestartSpec(node=node, at=at + slow_for + rng.uniform(0.2, 0.4) * duration)
                 )
+        # Churn draws AFTER the kill/restart draws (see docstring).
+        join_specs = [
+            JoinSpec(node=n, at=rng.uniform(0.2, 0.7) * duration)
+            for n in join_nodes
+        ]
+        drain_specs = [
+            DrainSpec(node=n, at=rng.uniform(0.2, 0.7) * duration,
+                      deadline=drain_deadline)
+            for n in drain_nodes
+        ]
         return cls(
             seed=seed,
             link_faults=link_faults,
             stragglers=stragglers,
             kills=kill_specs,
             restarts=restart_specs,
+            joins=join_specs,
+            drains=drain_specs,
         )
 
 
@@ -240,6 +284,7 @@ class FaultInjector:
 
     def __init__(self, plan: Optional[FaultPlan] = None):
         self.plan = plan or FaultPlan()
+        self._drain_deadlines = {d.node: d.deadline for d in self.plan.drains}
         # Slowdown windows: static stragglers plus the crawl phase of
         # every flaky kill, all queried through one slow_factor().
         self._windows: List[Tuple[int, float, float, float]] = [
@@ -260,7 +305,8 @@ class FaultInjector:
 
     def timeline(self) -> List[Tuple[float, str, int]]:
         """Sorted (at, kind, node) events: ``slow`` (flaky-kill crawl
-        onset), ``kill``, ``restart``.  Pure in the plan."""
+        onset), ``kill``, ``restart``, ``join``, ``drain``.  Pure in the
+        plan."""
         evs: List[Tuple[float, str, int]] = []
         for ks in self.plan.kills:
             if ks.slow_for > 0.0:
@@ -268,6 +314,10 @@ class FaultInjector:
             evs.append((ks.at + ks.slow_for, "kill", ks.node))
         for rs in self.plan.restarts:
             evs.append((rs.at, "restart", rs.node))
+        for js in self.plan.joins:
+            evs.append((js.at, "join", js.node))
+        for ds in self.plan.drains:
+            evs.append((ds.at, "drain", ds.node))
         return sorted(evs)
 
     # -- noise (pure) ------------------------------------------------------
@@ -335,7 +385,10 @@ class FaultInjector:
         if self._t0 is not None:
             return self
         self._t0 = time.monotonic()
-        if any(kind in ("kill", "restart") for _at, kind, _n in self.timeline()):
+        if any(
+            kind in ("kill", "restart", "join", "drain")
+            for _at, kind, _n in self.timeline()
+        ):
             self._thread = threading.Thread(
                 target=self._drive, args=(cluster,), daemon=True
             )
@@ -359,6 +412,27 @@ class FaultInjector:
                 cluster.fail_node(node)
             elif kind == "restart":
                 cluster.restart_node(node)
+            elif kind == "join":
+                # Churn events are applied best-effort (e.g. a join of an
+                # already-member id is a no-op revive) but ALWAYS logged:
+                # the replay contract compares the applied sequence, and
+                # an exception must not kill the driver thread mid-storm.
+                try:
+                    cluster.add_node(node)
+                except Exception:  # noqa: BLE001
+                    pass
+            elif kind == "drain":
+                # Drains block on evacuation: run each on its own thread
+                # so the storm's later events stay on schedule.
+                deadline = self._drain_deadlines.get(node, 10.0)
+
+                def _drain(node=node, deadline=deadline):
+                    try:
+                        cluster.drain_node(node, deadline=deadline)
+                    except Exception:  # noqa: BLE001
+                        pass
+
+                threading.Thread(target=_drain, daemon=True).start()
             # "slow" needs no action: slowdown windows are time-indexed.
             with self._log_lock:
                 self.log.append((round(at, 9), kind, node))
@@ -368,13 +442,20 @@ class FaultInjector:
     # -- timed events (simulated plane) -------------------------------------
 
     def apply_to_sim(self, cluster) -> None:
-        """Schedule the plan's kills in simulated time (call at sim time
-        0, before running).  Restarts are skipped: the simulator models
-        node death but not rejoin.  Slowdown windows need no scheduling
-        -- ``chunk_factors`` is queried with ``sim.now``."""
+        """Schedule the plan's kills and membership churn in simulated
+        time (call at sim time 0, before running).  Restarts are skipped:
+        the simulator models node death but not rejoin.  Joins/drains map
+        onto the simulator's ``add_node``/``drain_node`` when it grows
+        them (placement-policy modeling); missing hooks are skipped, not
+        errors.  Slowdown windows need no scheduling --
+        ``chunk_factors`` is queried with ``sim.now``."""
         for at, kind, node in self.timeline():
             if kind == "kill":
                 cluster.sim.schedule(at, self._sim_kill, cluster, node, at)
+            elif kind == "join" and hasattr(cluster, "add_node"):
+                cluster.sim.schedule(at, self._sim_churn, cluster, kind, node, at)
+            elif kind == "drain" and hasattr(cluster, "drain_node"):
+                cluster.sim.schedule(at, self._sim_churn, cluster, kind, node, at)
 
     def _sim_kill(self, cluster, node: int, at: float) -> None:
         cluster.fail_node(node)
@@ -382,3 +463,18 @@ class FaultInjector:
             self.log.append((round(at, 9), "kill", node))
         if cluster.trace.enabled:
             cluster.trace.instant(CAT_FAULT, "kill", node, at=at)
+
+    def _sim_churn(self, cluster, kind: str, node: int, at: float) -> None:
+        try:
+            if kind == "join":
+                cluster.add_node(node)
+            else:
+                cluster.drain_node(
+                    node, deadline=self._drain_deadlines.get(node, 10.0)
+                )
+        except Exception:  # noqa: BLE001 -- best-effort, always logged
+            pass
+        with self._log_lock:
+            self.log.append((round(at, 9), kind, node))
+        if cluster.trace.enabled:
+            cluster.trace.instant(CAT_FAULT, kind, node, at=at)

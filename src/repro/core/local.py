@@ -83,10 +83,11 @@ from repro.core.planner import (
     use_two_dimensional,
 )
 from repro.core.scheduler import ChainState, partition_groups
-from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore
+from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore, StoreRegistry
 from repro.core.trace import (
     CAT_CHAIN,
     CAT_FETCH,
+    CAT_MEMBERSHIP,
     CAT_STREAM,
     FlightRecorder,
     STAGE_CAP_BLOCKED,
@@ -190,7 +191,6 @@ class LocalCluster:
         faults=None,  # FaultPlan or FaultInjector (noise only; call
         #               injector.start(cluster) to arm kills/restarts)
     ):
-        self.num_nodes = num_nodes
         # ``chunk_size=None`` autotunes per object via the Appendix-A cost
         # model (CollectiveConfig.chunks_for); an explicit value pins it.
         self._explicit_chunk_size = chunk_size
@@ -226,11 +226,18 @@ class LocalCluster:
         # double-record directory events.
         self.trace = FlightRecorder(enabled=trace)
         self.directory.recorder = self.trace
-        self.stores = [
-            NodeStore(i, store_capacity, stats=self._stats) for i in range(num_nodes)
-        ]
+        # Membership-safe store registry: node ids are first-class members
+        # (join with ``add_node``, leave with ``drain_node``), not list
+        # indices.  ``num_nodes`` is derived from it (see the property).
+        self.stores = StoreRegistry(
+            store_capacity, stats=self._stats, seed_ids=range(num_nodes)
+        )
         self.meta: Dict[str, Tuple[np.dtype, tuple]] = {}
         self.dead: set = set()
+        # Nodes mid-drain: still alive (in-flight transfers finish; they
+        # can serve as sole sources) but soft-avoided for new selections
+        # and skipped for new placements until the drain completes.
+        self.draining: set = set()
         # Control-plane (directory) lock; exposed as ``lock`` for
         # compatibility.  The data plane does NOT take it per chunk.
         self._dir_lock = threading.RLock()
@@ -249,6 +256,12 @@ class LocalCluster:
         self.transfers: List[Tuple[int, int, str]] = []  # (src, dst, oid)
 
     # -- helpers -------------------------------------------------------------
+
+    @property
+    def num_nodes(self) -> int:
+        """Live membership count (joins and drains move it); dead-but-
+        not-drained members still count -- they may restart."""
+        return len(self.stores)
 
     @property
     def stats(self) -> Dict[str, object]:
@@ -842,6 +855,8 @@ class LocalCluster:
             if served:
                 with self._stats_lock:
                     self._stats.note_bytes_served(src, served)
+                    while src >= len(self.bytes_sent_per_node):
+                        self.bytes_sent_per_node.append(0)  # joined node
                     self.bytes_sent_per_node[src] += served
             if leg_t0 is not None:
                 self.trace.span(
@@ -1893,6 +1908,8 @@ class LocalCluster:
                         self._stats.note_bytes_reduced(dst, reduced)
                     for src, nbytes in served.items():
                         self._stats.note_bytes_served(src, nbytes)
+                        while src >= len(self.bytes_sent_per_node):
+                            self.bytes_sent_per_node.append(0)  # joined node
                         self.bytes_sent_per_node[src] += nbytes
                     for src in served:
                         self.transfers.append((src, dst, object_id))
@@ -2066,17 +2083,21 @@ class LocalCluster:
         with self._dir_lock:
             nodes = self.directory.delete(object_id)  # notifies subscribers
             for nid in nodes:
-                if nid < len(self.stores):
-                    self.stores[nid].delete(object_id)
+                # Non-creating registry lookup: the same guarded access
+                # whether the id is in the seed range, a joiner, or stale.
+                store = self.stores.get(nid)
+                if store is not None:
+                    store.delete(object_id)
             self.meta.pop(object_id, None)
 
     def fail_node(self, node: int) -> List[str]:
         """Kill a node: all its copies vanish; returns orphaned object ids
-        (no surviving copy anywhere -- framework must recover, section 7)."""
+        (no surviving copy anywhere -- framework must recover, section 7).
+        The node stays a *member* (it may restart)."""
         with self._dir_lock:
             self.dead.add(node)
-            old_store = self.stores[node]
-            self.stores[node] = NodeStore(node, self.store_capacity, stats=self._stats)
+            self.draining.discard(node)  # a dead node is no longer draining
+            old_store = self.stores.replace(node)
             orphaned = self.directory.fail_node(node)  # notifies subscribers
             self._wake_membership_waiters()
         # Wake readers gated on the dead node's watermarks (outside the
@@ -2087,8 +2108,8 @@ class LocalCluster:
     def restart_node(self, node: int):
         with self._dir_lock:
             self.dead.discard(node)
-            old_store = self.stores[node]
-            self.stores[node] = NodeStore(node, self.store_capacity, stats=self._stats)
+            old_store = self.stores.replace(node)
+            self.stores.add(node)  # re-establish membership (post-drain restarts)
             # Pre-restart streams are dead: zero the node's outbound load
             # and bump its charge epoch so their late releases cannot
             # free slots charged by post-restart streams.
@@ -2097,6 +2118,130 @@ class LocalCluster:
         # Any transfer still reading the pre-restart store's buffers must
         # fail over (those copies are gone from the directory).
         old_store.fail_all_buffers()
+
+    # -- Elastic membership --------------------------------------------------
+
+    def add_node(self, node: Optional[int] = None) -> int:
+        """Join a fresh node to the cluster (mid-collective joins are
+        absorbed: a joiner's ``get``/``prefetch_async`` becomes a leaf of
+        the running broadcast tree, chasing producing partials like any
+        other receiver -- no in-flight transfer restarts).  Returns the
+        node id (next free id when ``node`` is None)."""
+        with self._dir_lock:
+            if node is None:
+                node = max(self.stores.ids(), default=-1) + 1
+            node = int(node)
+            self.dead.discard(node)
+            self.draining.discard(node)
+            self.directory.set_draining(node, False)
+            self.stores.add(node)
+            # A joiner starts with a clean outbound ledger.
+            self.directory.reset_outbound(node)
+            self._stats.joins += 1
+            if self.trace.enabled:
+                self.trace.instant(CAT_MEMBERSHIP, "joined", node, "")
+            self._wake_membership_waiters()
+        return node
+
+    def drain_node(self, node: int, deadline: Optional[float] = None) -> List[str]:
+        """Planned departure with ZERO object loss.
+
+        Three phases:
+
+          1. *Wind down*: mark the node draining -- ``select_source``
+             soft-avoids its copies and new placements skip it, while
+             in-flight transfers it serves finish naturally.
+          2. *Evacuate*: every object whose ONLY complete copy lives on
+             this node is proactively re-replicated to a staying member
+             through the ordinary broadcast plane (``prefetch_async``
+             from the draining holder -- the same receiver-driven path
+             as any other transfer).  Producing/in-flight partials are
+             left to their own pipelines (their consumers hold leading
+             copies elsewhere by construction).
+          3. *Leave*: the node departs membership; the directory drops
+             its locations.  The orphan list from that drop is the
+             zero-loss proof -- it is empty iff evacuation covered
+             every sole copy.
+
+        ``deadline`` (seconds, default ``FaultToleranceConfig.get_timeout``)
+        bounds the evacuation phase; on expiry the node leaves anyway and
+        any still-orphaned ids are returned by the directory drop exactly
+        as ``fail_node`` would.  Returns the evacuated object ids.
+        """
+        deadline_s = self.ft.get_timeout if deadline is None else deadline
+        until = time.time() + deadline_s
+        with self._dir_lock:
+            self._check_alive(node)
+            if node not in self.stores:
+                raise DeadNode(str(node))
+            self.draining.add(node)
+            self.directory.set_draining(node, True)
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_MEMBERSHIP, "drain-start", node, "", deadline=deadline_s
+                )
+            self._wake_membership_waiters()
+        evacuated: List[str] = []
+        while time.time() < until:
+            with self._dir_lock:
+                store = self.stores[node]
+                at_risk = []
+                for oid in self.directory.objects_at(node):
+                    if not self.directory.sole_holder(oid, node):
+                        continue
+                    buf = store.get(oid)
+                    if buf is None or not buf.complete:
+                        # In-flight/producing partial: its pipeline's
+                        # consumer (which leads it) owns recovery.
+                        continue
+                    at_risk.append(oid)
+                targets = [
+                    i for i in self.stores.ids()
+                    if i != node and i not in self.dead and i not in self.draining
+                ]
+            if not at_risk or not targets:
+                break
+            # Spread evacuations over the least-loaded staying members;
+            # the transfers ride the ordinary receiver-driven broadcast
+            # plane (prefetch_async), so they pipeline and fail over like
+            # any other traffic.
+            futs = []
+            for k, oid in enumerate(at_risk):
+                tgt = targets[k % len(targets)]
+                futs.append((oid, self.prefetch_async(
+                    tgt, oid, timeout=max(0.1, until - time.time())
+                )))
+            for oid, fut in futs:
+                try:
+                    fut.result(timeout=max(0.1, until - time.time()))
+                    evacuated.append(oid)
+                except BaseException:  # noqa: BLE001 -- re-scan decides
+                    pass
+            # Loop: re-scan for objects Put on the draining node while we
+            # were evacuating (drain under load).
+        with self._dir_lock:
+            self.dead.add(node)
+            old_store = self.stores.replace(node)
+            self.stores.remove(node)  # departs membership (unlike fail_node)
+            orphaned = self.directory.fail_node(node)  # also clears draining
+            self.draining.discard(node)
+            self._stats.drains += 1
+            self._stats.evacuated_objects += len(evacuated)
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_MEMBERSHIP, "drain-complete", node, "",
+                    evacuated=len(evacuated), orphaned=len(orphaned),
+                )
+            self._wake_membership_waiters()
+        old_store.fail_all_buffers()
+        if orphaned:
+            # Deadline expired with sole copies left: surface it loudly --
+            # the zero-loss guarantee only holds within the deadline.
+            raise ObjectLost(
+                f"drain of node {node} orphaned {len(orphaned)} objects: "
+                f"{sorted(orphaned)[:5]}"
+            )
+        return evacuated
 
     def fail_directory_primary(self):
         """Kill the primary directory; promote replica (paper section 7)."""

@@ -50,7 +50,7 @@ from repro.core.planner import (
     use_two_dimensional,
 )
 from repro.core.scheduler import ChainState, Hop, partition_groups
-from repro.core.trace import CAT_CHAIN, CAT_STREAM, FlightRecorder
+from repro.core.trace import CAT_CHAIN, CAT_MEMBERSHIP, CAT_STREAM, FlightRecorder
 
 # ---------------------------------------------------------------------------
 # Event kernel (miniature SimPy)
@@ -253,7 +253,11 @@ class SimCluster:
                  faults=None):
         self.spec = spec
         self.sim = Simulator()
-        self.nodes = [Node(self.sim, i) for i in range(spec.num_nodes)]
+        # Membership-safe registry (dict keyed by node id, like the
+        # threaded plane's StoreRegistry): every access is by id, so
+        # joins (add_node) and drains (drain_node) after construction
+        # never shift indices.
+        self.nodes = {i: Node(self.sim, i) for i in range(spec.num_nodes)}
         self.directory = ObjectDirectory()
         self.bytes_on_wire = 0
         # Fault-injection plane (core/faults): the SAME FaultPlan schema
@@ -405,6 +409,48 @@ class SimCluster:
         self.nodes[node].failed = True
         self.nodes[node].buffers.clear()
         return self.directory.fail_node(node)
+
+    # -- elastic membership --------------------------------------------------
+
+    def add_node(self, node: Optional[int] = None) -> int:
+        """Join a fresh node at the current simulated time.  Collective
+        *policies* (tree shape, chunk counts) keep using ``spec.num_nodes``
+        -- the simulator models protocol timing for a planned fleet, and a
+        joiner becomes an extra placement target, not a re-planned tree."""
+        if node is None:
+            node = max(self.nodes, default=-1) + 1
+        node = int(node)
+        existing = self.nodes.get(node)
+        if existing is not None:
+            existing.failed = False
+        else:
+            self.nodes[node] = Node(self.sim, node)
+        self.directory.set_draining(node, False)
+        if self.trace.enabled:
+            self.trace.instant(CAT_MEMBERSHIP, "joined", node, "")
+        return node
+
+    def drain_node(self, node: int, deadline: float = 0.0) -> List[str]:
+        """Planned departure in simulated time.  The simulator models
+        placement/timing, not byte-exact evacuation traffic (that is the
+        threaded plane's job): the node is soft-avoided by
+        ``select_source`` from now on, then leaves -- the returned list
+        is whatever the directory drop orphaned."""
+        self.directory.set_draining(node, True)
+        if self.trace.enabled:
+            self.trace.instant(CAT_MEMBERSHIP, "drain-start", node, "")
+        n = self.nodes.get(node)
+        if n is not None:
+            n.failed = True
+            n.buffers.clear()
+        orphaned = self.directory.fail_node(node)  # clears draining too
+        self.nodes.pop(node, None)
+        if self.trace.enabled:
+            self.trace.instant(
+                CAT_MEMBERSHIP, "drain-complete", node, "",
+                orphaned=len(orphaned),
+            )
+        return orphaned
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,9 @@ class DataPlaneStats:
         "stall_replans",
         "straggler_cuts",
         "dropped_contributions",
+        "joins",
+        "drains",
+        "evacuated_objects",
         "bytes_served",
         "peak_outbound",
         "bytes_reduced",
@@ -111,6 +114,9 @@ class DataPlaneStats:
         self.stall_replans = 0
         self.straggler_cuts = 0
         self.dropped_contributions = 0
+        self.joins = 0
+        self.drains = 0
+        self.evacuated_objects = 0
         self.bytes_served: Dict[int, int] = {}
         self.peak_outbound: Dict[int, int] = {}
         self.bytes_reduced: Dict[int, int] = {}
@@ -423,3 +429,101 @@ class NodeStore:
         watermarks (targeted replacement for the old global notify_all)."""
         for buf in list(self.objects.values()):
             buf.fail()
+
+
+class StoreRegistry:
+    """Membership-safe registry of per-node stores.
+
+    Replaces the seed-era ``[NodeStore(i) for i in range(num_nodes)]``
+    list so node ids are first-class members, not list indices: nodes
+    can join (``add``) and leave (``remove``) after construction, and a
+    store access with an id beyond the seed range can never raise
+    ``IndexError`` or silently fall off a length guard.
+
+    Two structures, deliberately separate:
+
+      * ``_members`` -- the ids that currently *belong* to the cluster
+        (``len()``, ``ids()``, ``in``).  ``fail_node`` keeps membership
+        (a dead member still counts toward the fleet); ``drain_node``
+        removes it (the node left on purpose).
+      * ``_stores``  -- node id -> :class:`NodeStore`.  ``__getitem__``
+        is ensure-on-access (a stray id gets an empty store rather than
+        a crash) but never grows *membership* -- only ``add`` does.
+
+    Iteration yields stores (sorted by id) for compatibility with the
+    seed-era list (``for s in cluster.stores``); mutations happen under
+    the owning cluster's directory lock, like ``NodeStore`` itself.
+    """
+
+    def __init__(
+        self,
+        capacity_bytes: Optional[int] = None,
+        stats: Optional[DataPlaneStats] = None,
+        seed_ids=(),
+    ):
+        self.capacity_bytes = capacity_bytes
+        self.stats = stats
+        self._stores: Dict[int, NodeStore] = {}
+        self._members: set = set()
+        for nid in seed_ids:
+            self.add(int(nid))
+
+    def _fresh(self, nid: int) -> NodeStore:
+        return NodeStore(nid, self.capacity_bytes, stats=self.stats)
+
+    # -- membership ----------------------------------------------------------
+
+    def add(self, nid: int) -> NodeStore:
+        """Make ``nid`` a member and ensure it has a store."""
+        self._members.add(nid)
+        store = self._stores.get(nid)
+        if store is None:
+            store = self._stores[nid] = self._fresh(nid)
+        return store
+
+    def remove(self, nid: int) -> Optional[NodeStore]:
+        """Drop ``nid`` from membership and discard its store (drain
+        departure).  Returns the old store, if any, so the caller can
+        fail its buffers outside the directory lock."""
+        self._members.discard(nid)
+        return self._stores.pop(nid, None)
+
+    def replace(self, nid: int) -> NodeStore:
+        """Swap in a fresh empty store (fail/restart), leaving membership
+        untouched.  Returns the OLD store so the caller can fail its
+        buffers outside the directory lock."""
+        old = self._stores.get(nid)
+        if old is None:
+            old = self._fresh(nid)
+        self._stores[nid] = self._fresh(nid)
+        return old
+
+    def ids(self):
+        """Sorted member ids."""
+        return sorted(self._members)
+
+    def __contains__(self, nid) -> bool:
+        return nid in self._members
+
+    def __len__(self) -> int:
+        return len(self._members)
+
+    # -- store access --------------------------------------------------------
+
+    def __getitem__(self, nid: int) -> NodeStore:
+        """Ensure-on-access: a store exists for any id asked about, but
+        asking never grows *membership* (see class docstring)."""
+        store = self._stores.get(nid)
+        if store is None:
+            store = self._stores[nid] = self._fresh(nid)
+        return store
+
+    def get(self, nid: int) -> Optional[NodeStore]:
+        """Non-creating lookup (``delete`` uses this: deleting from a
+        node that has no store must not conjure one)."""
+        return self._stores.get(nid)
+
+    def __iter__(self):
+        # Yields STORES, sorted by node id -- list-compatible with the
+        # seed-era ``for s in cluster.stores``.
+        return iter([self._stores[i] for i in sorted(self._stores)])

@@ -84,9 +84,10 @@ CAT_CHAIN = "chain"          # reduce hops, chain folds, re-splices
 CAT_STAGE = "stage"          # stage-attribution spans (critical path)
 CAT_SERVE = "serve"          # router / request lifecycle
 CAT_FAULT = "fault"          # injected faults (kills, restarts, slow onsets)
+CAT_MEMBERSHIP = "membership"  # elastic membership (joins, drains)
 
 CATEGORIES = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE,
-              CAT_SERVE, CAT_FAULT)
+              CAT_SERVE, CAT_FAULT, CAT_MEMBERSHIP)
 
 # pid lane for serving-plane events (data-plane nodes are >= 0)
 NODE_ROUTER = -1

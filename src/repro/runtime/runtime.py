@@ -18,6 +18,7 @@ Semantics follow the paper's framing of Ray:
 
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 import time
@@ -87,17 +88,29 @@ class Runtime:
         self.cluster = cluster or LocalCluster(
             num_nodes, fault_tolerance=fault_tolerance, faults=faults
         )
-        self.num_nodes = self.cluster.num_nodes
+        self._executors_per_node = executors_per_node
         self._rng = np.random.RandomState(seed)
         self._rr = itertools.count()
         self._lineage: Dict[str, Tuple[Callable, tuple, dict, int]] = {}
         self._refs: Dict[str, ObjectRef] = {}
         self._lock = threading.RLock()
-        self._sema = [threading.Semaphore(executors_per_node) for _ in range(self.num_nodes)]
+        # Per-node executor slots, keyed by node id: elastic membership
+        # means nodes appear after construction, so a joiner gets its
+        # semaphore lazily on first placement.
+        self._sema = collections.defaultdict(
+            lambda: threading.Semaphore(executors_per_node)
+        )
+        for i in self.cluster.stores.ids() if hasattr(self.cluster.stores, "ids") else range(self.cluster.num_nodes):
+            self._sema[i]
         self.tasks_executed = 0
         self.tasks_reexecuted = 0
         # Failure hooks: cb(node, orphaned_object_ids) on every node kill.
         self._failure_listeners: List[Callable[[int, List[str]], None]] = []
+
+    @property
+    def num_nodes(self) -> int:
+        """Live cluster membership (tracks joins/drains)."""
+        return self.cluster.num_nodes
 
     # -- failure hooks ------------------------------------------------------
 
@@ -123,6 +136,20 @@ class Runtime:
     def restart_node(self, node: int) -> None:
         self.cluster.restart_node(node)
 
+    def add_node(self, node: Optional[int] = None) -> int:
+        """Join a fresh executor node (elastic scale-up); new task
+        placements start landing on it immediately."""
+        nid = self.cluster.add_node(node)
+        with self._lock:
+            self._sema[nid]  # materialize its executor slots
+        return nid
+
+    def drain_node(self, node: int, deadline: Optional[float] = None) -> List[str]:
+        """Planned scale-down: stop placing new tasks on ``node`` (it is
+        marked draining), evacuate sole object copies, then remove it
+        from membership.  Returns the evacuated object ids."""
+        return self.cluster.drain_node(node, deadline=deadline)
+
     def placement_of(self, ref: ObjectRef) -> Optional[int]:
         """The node the ref's producing task ran on (or None for an
         unplaced/errored ref)."""
@@ -133,8 +160,15 @@ class Runtime:
     def _pick_node(self, node: Optional[int]) -> int:
         if node is not None:
             return node
-        alive = [i for i in range(self.num_nodes) if i not in self.cluster.dead]
-        return alive[next(self._rr) % len(alive)]
+        cluster = self.cluster
+        stores = cluster.stores
+        members = stores.ids() if hasattr(stores, "ids") else range(cluster.num_nodes)
+        alive = [i for i in members if i not in cluster.dead]
+        # Prefer non-draining members: a draining node finishes what it
+        # has but takes no new placements (unless it is all that's left).
+        draining = getattr(cluster, "draining", ())
+        pool = [i for i in alive if i not in draining] or alive
+        return pool[next(self._rr) % len(pool)]
 
     # -- task submission ------------------------------------------------------
 

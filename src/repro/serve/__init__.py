@@ -8,19 +8,24 @@ Layered on :class:`repro.runtime.Runtime` / ``LocalCluster``:
     annotated reduce aggregation, straggler/failure cut-off;
   * :mod:`repro.serve.deploy`   -- versioned weight deployment through the
     receiver-driven broadcast tree, hot-swap mid-traffic;
-  * :mod:`repro.serve.metrics`  -- telemetry shared with the simulator.
+  * :mod:`repro.serve.metrics`  -- telemetry shared with the simulator;
+  * :mod:`repro.serve.autoscaler` -- queue-driven elastic scaling of the
+    replica set (join via the broadcast tree, leave via drain_node).
 """
 
+from repro.serve.autoscaler import AutoscalerConfig, QueueAutoscaler
 from repro.serve.deploy import WeightDeployment
 from repro.serve.ensemble import EnsembleConfig, EnsembleGroup, QuorumLost, ReplicaHandle
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
 from repro.serve.router import OpenLoopRouter, Rejected, ReplicaQueue, RouterConfig
 
 __all__ = [
+    "AutoscalerConfig",
     "EnsembleConfig",
     "EnsembleGroup",
     "LatencyHistogram",
     "OpenLoopRouter",
+    "QueueAutoscaler",
     "QuorumLost",
     "Rejected",
     "ReplicaHandle",

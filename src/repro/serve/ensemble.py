@@ -64,6 +64,14 @@ class EnsembleConfig:
     # adaptive broadcast tree; sibling-stream dedupe prevents double
     # transfers when both paths race.
     prefetch_inputs: bool = False
+    # Cap the per-request fan-out: with None every alive replica with a
+    # free queue slot computes every request, so ADDING replicas never
+    # adds throughput (each request costs num_replicas tasks no matter
+    # the fleet size).  With max_fanout set, each request runs on the
+    # max(quorum, max_fanout) least-loaded replicas -- capacity then
+    # scales with the replica count, which is what makes autoscaling
+    # (serve/autoscaler.py) able to absorb a load spike.
+    max_fanout: Optional[int] = None
 
 
 class EnsembleGroup:
@@ -115,6 +123,43 @@ class EnsembleGroup:
     def queue_depths(self) -> Dict[int, int]:
         return {r.replica_id: r.queue.inflight for r in self.replicas}
 
+    def add_replica(self, node: Optional[int] = None) -> ReplicaHandle:
+        """Elastic scale-up: add a replica on ``node`` (a fresh runtime
+        node when None) and stage the CURRENT weight version to it
+        through the broadcast tree, so its first request needs no cold
+        fetch from the origin.  The replica starts taking requests as
+        soon as it is appended."""
+        if node is None:
+            node = self.runtime.add_node()
+        with self._lock:
+            replica_id = max((r.replica_id for r in self.replicas), default=-1) + 1
+            handle = ReplicaHandle(
+                replica_id, node, ReplicaQueue(self.config.replica_queue_depth)
+            )
+        _version, weights_ref = self.deployment.current()
+        if weights_ref is not None:
+            # Weight deployment rides the adaptive broadcast tree: the
+            # joiner pulls from the least-loaded holder, not the origin.
+            self.runtime.broadcast(
+                weights_ref, [node], timeout=self.config.request_timeout_s
+            )
+        with self._lock:
+            self.replicas.append(handle)
+        return handle
+
+    def retire_replica(self, replica_id: int) -> Optional[ReplicaHandle]:
+        """Elastic scale-down, phase 1: stop routing NEW requests to the
+        replica (``alive=False``); in-flight tasks finish and release
+        their queue slots normally.  The caller drains the hosting node
+        once ``handle.queue.inflight`` reaches zero (see
+        ``QueueAutoscaler._scale_down``)."""
+        with self._lock:
+            for r in self.replicas:
+                if r.replica_id == replica_id and r.alive:
+                    r.alive = False
+                    return r
+        return None
+
     # -- deployment ----------------------------------------------------------
 
     def deploy(self, weights: np.ndarray, **kwargs) -> int:
@@ -129,8 +174,18 @@ class EnsembleGroup:
         if weights_ref is None:
             raise RuntimeError("no weights deployed")
 
+        candidates = self.alive_replicas()
+        if cfg.max_fanout is not None:
+            fanout = max(cfg.quorum, cfg.max_fanout)
+            if len(candidates) > fanout:
+                # Least-loaded subset (ties broken by replica id for
+                # determinism): each request costs ``fanout`` tasks, so
+                # capacity scales with the replica count.
+                candidates = sorted(
+                    candidates, key=lambda r: (r.queue.inflight, r.replica_id)
+                )[:fanout]
         targets = []
-        for r in self.alive_replicas():
+        for r in candidates:
             if r.queue.try_acquire():
                 targets.append(r)
         if len(targets) < cfg.quorum:

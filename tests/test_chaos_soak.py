@@ -177,3 +177,70 @@ def test_chaos_soak_concurrent_collectives():
     # The applied fault sequence is exactly the plan's timeline (replay
     # contract holds under full concurrency).
     assert inj.log == [(round(at, 9), k, n) for at, k, n in inj.timeline()]
+
+
+# ---------------------------------------------------------------------------
+# elastic-membership churn (ISSUE 8, satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def _churn_storm(duration=1.0, num_nodes=6):
+    return FaultPlan.storm(
+        SEED, num_nodes, duration=duration, victims=[3], kills=1,
+        restart=True, flaky=True, jitter_s=0.0005,
+        join_nodes=(num_nodes, num_nodes + 1), drain_nodes=(4,),
+        drain_deadline=5.0,
+    )
+
+
+def test_churn_plan_is_deterministic():
+    a, b = _churn_storm(), _churn_storm()
+    assert a == b, "equal seeds must produce equal churn plans"
+    assert len(a.joins) == 2 and len(a.drains) == 1
+    ia, ib = FaultInjector(a), FaultInjector(b)
+    assert ia.timeline() == ib.timeline()
+    kinds = {k for _at, k, _n in ia.timeline()}
+    assert {"join", "drain"} <= kinds
+
+
+def test_churn_draws_do_not_perturb_kill_schedule():
+    """Enabling churn must leave the kill/restart draws untouched (churn
+    times are drawn AFTER every kill/restart draw), so existing seeded
+    campaigns replay identically when churn defaults stay off."""
+    base = FaultPlan.storm(SEED, 6, duration=1.0, victims=[3], kills=1,
+                           restart=True, flaky=True, jitter_s=0.0005)
+    churn = _churn_storm()
+    assert churn.kills == base.kills
+    assert churn.restarts == base.restarts
+    assert churn.link_faults == base.link_faults
+    assert base.joins == [] and base.drains == []
+
+
+def test_live_replay_with_churn_identical_logs():
+    """Two live runs of the same churn storm apply the same
+    (at, kind, node) sequence -- joins and drains included -- and it is
+    exactly the plan's timeline."""
+
+    def run_once():
+        c = LocalCluster(4, chunk_size=32768, pace=0.0003)
+        plan = FaultPlan.storm(SEED, 4, duration=0.6, victims=[3], kills=1,
+                               restart=True, flaky=True, jitter_s=0.0,
+                               join_nodes=(4,), drain_nodes=(2,),
+                               drain_deadline=3.0)
+        inj = FaultInjector(plan).start(c)
+        x = np.random.RandomState(SEED).rand(ELEMS)
+        c.put(0, "x", x)
+        np.testing.assert_array_equal(c.get(1, "x"), x)
+        last = max(at for at, _k, _n in inj.timeline())
+        time.sleep(max(0.0, last - inj.elapsed()) + 0.5)
+        inj.stop()
+        return inj, c
+
+    (ia, ca), (ib, cb) = run_once(), run_once()
+    assert ia.log == ib.log, "live churn replay diverged"
+    assert ia.log == [(round(at, 9), k, n) for at, k, n in ia.timeline()]
+    kinds = {k for _at, k, _n in ia.log}
+    assert {"join", "drain"} <= kinds
+    # The join actually landed (node 4 is a member) on both runs.
+    for c in (ca, cb):
+        assert 4 in c.stores

@@ -1,0 +1,461 @@
+"""Elastic membership (ISSUE 8): join/drain-aware collectives + autoscaler.
+
+Covers the tentpole and satellites:
+
+  * store registry is membership-safe for node ids beyond the seed range
+    (the historical ``fail_node``/``restart_node`` vs ``delete`` indexing
+    inconsistency -- satellite 1);
+  * a node joining MID-collective is absorbed without restarting the
+    in-flight transfers: every receiver, old and new, gets byte-identical
+    data, and the join is observable as a ``membership`` trace event;
+  * ``drain_node`` under load evacuates sole complete copies before the
+    node leaves -- zero object loss even with receivers mid-stream;
+  * the directory soft-avoids draining holders in ``select_source``;
+  * ``QueueAutoscaler`` policy: scale-up on queue depth / rejections,
+    scale-down only after the hysteresis dwell, floor at
+    ``max(min_replicas, quorum)``, cooldown between actions;
+  * ``OpenLoopRouter.drain`` with in-flight requests (satellite 3):
+    outstanding reaches zero, late completions release their replica
+    queue slots, and ``offered == completed + rejected + failed`` exactly.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import ObjectLost
+from repro.core.local import DeadNode, LocalCluster
+from repro.core.trace import CAT_MEMBERSHIP
+from repro.runtime import Runtime
+from repro.serve import (
+    AutoscalerConfig,
+    EnsembleConfig,
+    EnsembleGroup,
+    OpenLoopRouter,
+    QueueAutoscaler,
+    RouterConfig,
+    ServeMetrics,
+)
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: registry handles node ids beyond the seed range
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ops_beyond_seed_range():
+    """fail/restart/delete with a node id the seed never had must not
+    raise (the old list-indexed stores crashed or silently skipped
+    depending on WHICH method you called)."""
+    c = LocalCluster(3)
+    x = np.arange(64.0)
+    c.put(0, "x", x)
+
+    c.fail_node(99)           # unknown node: becomes dead, membership unchanged
+    assert 99 in c.dead
+    assert c.num_nodes == 3
+    c.restart_node(99)        # restart of an unknown node joins it fresh
+    assert 99 not in c.dead
+    assert c.num_nodes == 4
+    c.delete("nope")          # unknown object: no-op on every member store
+    c.delete("x")
+    with pytest.raises(ObjectLost):
+        c.get(1, "x", timeout=0.5)
+
+
+def test_registry_iteration_and_membership():
+    c = LocalCluster(3)
+    assert sorted(s.node_id for s in c.stores) == [0, 1, 2]
+    assert c.stores.ids() == [0, 1, 2]
+    n = c.add_node()
+    assert n == 3 and c.num_nodes == 4
+    assert 3 in c.stores
+    c.fail_node(1)            # dead but still a member (may restart)
+    assert 1 in c.stores and c.num_nodes == 4
+    c.drain_node(2, deadline=2.0)   # drained: membership gone
+    assert 2 not in c.stores and c.num_nodes == 3
+
+
+# ---------------------------------------------------------------------------
+# tentpole: mid-collective join
+# ---------------------------------------------------------------------------
+
+
+def test_mid_collective_join_byte_identical():
+    """A node that joins while a broadcast is in flight gets the same
+    bytes as the original receivers, without restarting their streams."""
+    c = LocalCluster(4, chunk_size=64 * 1024, pace=0.0003, trace=True)
+    data = np.random.RandomState(7).rand(300_000)  # 2.4 MB, paced stream
+    c.put(0, "w", data)
+
+    futs = [c.get_async(i, "w", timeout=60.0) for i in (1, 2, 3)]
+    time.sleep(0.05)                       # streams in flight
+    joiner = c.add_node()
+    assert joiner == 4 and c.num_nodes == 5
+    late = c.get_async(joiner, "w", timeout=60.0)
+
+    for f in futs + [late]:
+        np.testing.assert_array_equal(f.result(timeout=60.0), data)
+    joins = [e for e in c.trace.events()
+             if e[3] == CAT_MEMBERSHIP and e[4] == "joined"]
+    assert len(joins) >= 1
+    assert c.stats["joins"] == 1
+
+
+def test_join_participates_in_allreduce():
+    """After a join, the new node is a first-class collective member."""
+    c = LocalCluster(3, chunk_size=64 * 1024)
+    j = c.add_node()
+    nodes = c.stores.ids()
+    assert j in nodes
+    parts = {i: np.full(50_000, float(i + 1)) for i in nodes}
+    for i, v in parts.items():
+        c.put(i, f"part-{i}", v)
+    out = c.allreduce(nodes, "ar-out", [f"part-{i}" for i in nodes], timeout=60.0)
+    expect = np.sum([parts[i] for i in nodes], axis=0)
+    for i in nodes:
+        np.testing.assert_allclose(c.get(i, "ar-out", timeout=60.0), expect)
+    assert out is not None
+
+
+# ---------------------------------------------------------------------------
+# tentpole: drain with zero object loss
+# ---------------------------------------------------------------------------
+
+
+def test_drain_evacuates_sole_copy():
+    c = LocalCluster(4, chunk_size=32 * 1024)
+    big = np.random.RandomState(1).rand(100_000)  # 800 KB: store path
+    c.put(2, "big", big)
+    evacuated = c.drain_node(2, deadline=15.0)
+    assert evacuated == ["big"]
+    assert c.num_nodes == 3 and 2 in c.dead
+    np.testing.assert_array_equal(c.get(0, "big", timeout=15.0), big)
+    assert c.stats["drains"] == 1
+    assert c.stats["evacuated_objects"] == 1
+
+
+def test_drain_under_load_zero_loss():
+    """Receivers mid-stream from the draining node must still complete:
+    drain evacuates the sole complete copy FIRST (partial receiver
+    copies do not count as safety -- they cannot finish without a
+    complete head) and only then takes the node out."""
+    c = LocalCluster(4, chunk_size=32 * 1024, pace=0.0005)
+    payload = np.random.RandomState(2).rand(200_000)  # 1.6 MB
+    c.put(1, "p", payload)
+    futs = [c.get_async(i, "p", timeout=30.0) for i in (0, 2, 3)]
+    evacuated = c.drain_node(1, deadline=15.0)
+    for f in futs:
+        np.testing.assert_array_equal(f.result(timeout=30.0), payload)
+    assert "p" in evacuated
+    np.testing.assert_array_equal(c.get(3, "p", timeout=15.0), payload)
+
+
+def test_drain_small_objects_ride_inline():
+    """Sub-threshold objects live in the directory inline cache: no
+    evacuation bytes needed, and they survive the drain regardless."""
+    c = LocalCluster(3)
+    small = np.arange(1000.0)  # 8 KB < SMALL_OBJECT_THRESHOLD
+    c.put(1, "small", small)
+    evacuated = c.drain_node(1, deadline=5.0)
+    assert evacuated == []
+    np.testing.assert_array_equal(c.get(0, "small", timeout=5.0), small)
+
+
+def test_drain_rejects_dead_and_unknown_nodes():
+    c = LocalCluster(3)
+    c.fail_node(1)
+    with pytest.raises(DeadNode):
+        c.drain_node(1, deadline=1.0)
+    with pytest.raises(DeadNode):
+        c.drain_node(42, deadline=1.0)
+
+
+def test_select_source_soft_avoids_draining_holder():
+    c = LocalCluster(4)
+    z = np.random.RandomState(3).rand(100_000)
+    c.put(0, "z", z)
+    c.put(1, "z", z)
+    c.directory.set_draining(0, True)
+    for _ in range(8):  # rotating tie-break must never pick the drainer
+        loc = c.directory.select_source("z", exclude=2, min_lead=-1)
+        assert loc.node == 1
+        c.directory.release_source("z", loc.node)
+    # ...but a draining SOLE holder is still pickable (liveness).
+    c.directory.set_draining(1, True)
+    c.directory.set_draining(0, False)
+    c.directory.set_draining(0, True)
+    loc = c.directory.select_source("z", exclude=2, min_lead=-1)
+    assert loc is not None
+    c.directory.release_source("z", loc.node)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler policy (unit, injectable clock, fake group/runtime)
+# ---------------------------------------------------------------------------
+
+
+class _FakeQueue:
+    def __init__(self):
+        self.inflight = 0
+
+
+class _FakeReplica:
+    def __init__(self, rid, node):
+        self.replica_id = rid
+        self.node = node
+        self.queue = _FakeQueue()
+        self.alive = True
+
+
+class _FakeGroupConfig:
+    quorum = 2
+
+
+class _FakeGroup:
+    def __init__(self, n):
+        self.config = _FakeGroupConfig()
+        self.replicas = [_FakeReplica(i, i) for i in range(n)]
+        self.metrics = ServeMetrics()
+
+    def alive_replicas(self):
+        return [r for r in self.replicas if r.alive]
+
+    def add_replica(self, node):
+        rid = max(r.replica_id for r in self.replicas) + 1
+        r = _FakeReplica(rid, node)
+        self.replicas.append(r)
+        return r
+
+    def retire_replica(self, rid):
+        for r in self.replicas:
+            if r.replica_id == rid and r.alive:
+                r.alive = False
+                return r
+        return None
+
+
+class _FakeRuntime:
+    def __init__(self):
+        self.next_node = 100
+        self.drained = []
+
+    def add_node(self):
+        self.next_node += 1
+        return self.next_node
+
+    def drain_node(self, node, deadline=None):
+        self.drained.append(node)
+        return []
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _scaler(n=2, **cfg):
+    group = _FakeGroup(n)
+    rt = _FakeRuntime()
+    clock = _Clock()
+    defaults = dict(min_replicas=2, max_replicas=6, hysteresis_s=1.0,
+                    retire_wait_s=0.1)
+    defaults.update(cfg)
+    sc = QueueAutoscaler(rt, group, metrics=group.metrics,
+                         config=AutoscalerConfig(**defaults), clock=clock)
+    return sc, group, rt, clock
+
+
+def test_autoscaler_scales_up_on_queue_depth():
+    sc, group, rt, clock = _scaler(2)
+    for r in group.alive_replicas():
+        r.queue.inflight = 5     # depth 5 > threshold 2
+    assert sc.tick() == "scale-up"
+    assert len(group.alive_replicas()) == 3
+    assert sc.actions[0][1] == "scale-up"
+
+
+def test_autoscaler_scales_up_on_rejections():
+    sc, group, rt, clock = _scaler(2)
+    group.metrics.inc("rejected", 3)  # queues calm, load being shed
+    assert sc.tick() == "scale-up"
+
+
+def test_autoscaler_cooldown_blocks_back_to_back_actions():
+    sc, group, rt, clock = _scaler(2, hysteresis_s=1.0)
+    for r in group.alive_replicas():
+        r.queue.inflight = 5
+    assert sc.tick() == "scale-up"
+    clock.t = 0.5                 # still inside cooldown
+    assert sc.tick() is None
+    clock.t = 1.5                 # cooldown over, still hot
+    assert sc.tick() == "scale-up"
+
+
+def test_autoscaler_scale_down_needs_full_dwell_and_respects_floor():
+    sc, group, rt, clock = _scaler(2, hysteresis_s=1.0)
+    for r in group.alive_replicas():
+        r.queue.inflight = 5
+    assert sc.tick() == "scale-up"        # now 3 replicas, 1 autoscaled
+    for r in group.alive_replicas():
+        r.queue.inflight = 0
+
+    clock.t = 2.0
+    assert sc.tick() is None              # dwell starts now, not yet down
+    clock.t = 2.5
+    assert sc.tick() is None              # dwell not complete
+    clock.t = 3.1
+    assert sc.tick() == "scale-down"      # full 1 s of low pressure
+    assert len(group.alive_replicas()) == 2
+    assert rt.drained == [101]            # the autoscaled node was drained
+
+    # At the floor (min_replicas=2 == alive) nothing more comes down,
+    # and seed replicas are never retired.
+    clock.t = 10.0
+    assert sc.tick() is None
+    assert len(group.alive_replicas()) == 2
+
+
+def test_autoscaler_never_exceeds_max_replicas():
+    sc, group, rt, clock = _scaler(2, max_replicas=3)
+    for r in group.alive_replicas():
+        r.queue.inflight = 9
+    assert sc.tick() == "scale-up"
+    clock.t = 5.0
+    for r in group.alive_replicas():
+        r.queue.inflight = 9
+    assert sc.tick() is None      # at max_replicas
+    assert len(group.alive_replicas()) == 3
+
+
+def test_autoscaler_end_to_end_scale_up_then_down():
+    """Real runtime + ensemble: saturate -> scale-up joins a node and
+    stages weights; idle dwell -> scale-down drains it back out."""
+    rt = Runtime(num_nodes=3, executors_per_node=2)
+    ens = EnsembleGroup(
+        rt, model_fn=lambda w, x: x * float(np.asarray(w).ravel()[0]),
+        config=EnsembleConfig(num_replicas=3, quorum=2, max_fanout=2,
+                              request_timeout_s=30.0),
+    )
+    ens.deploy(np.full(32 * 1024, 2.0))
+    clock = _Clock()
+    sc = QueueAutoscaler(
+        rt, ens, metrics=ens.metrics,
+        config=AutoscalerConfig(min_replicas=3, max_replicas=5,
+                                hysteresis_s=1.0, retire_wait_s=2.0,
+                                drain_deadline_s=10.0),
+        clock=clock,
+    )
+    n0 = rt.num_nodes
+    ens.metrics.inc("rejected", 5)
+    assert sc.tick() == "scale-up"
+    assert rt.num_nodes == n0 + 1
+    assert len(ens.alive_replicas()) == 4
+    # The joiner serves from a warm weight copy.
+    value = ens.handle_request(np.full(64, 3.0))
+    np.testing.assert_allclose(value, np.full(64, 6.0))
+
+    clock.t = 2.0
+    assert sc.tick() is None      # dwell begins
+    clock.t = 3.1
+    assert sc.tick() == "scale-down"
+    assert len(ens.alive_replicas()) == 3
+    assert rt.num_nodes == n0     # node drained back out of membership
+    # Service still healthy at the floor.
+    value = ens.handle_request(np.full(64, 5.0))
+    np.testing.assert_allclose(value, np.full(64, 10.0))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: router drain with in-flight requests
+# ---------------------------------------------------------------------------
+
+
+class _SlowBackend:
+    """handle_request blocks until released; counts concurrent entries."""
+
+    def __init__(self):
+        self.gate = threading.Event()
+        self.entered = 0
+        self._lock = threading.Lock()
+
+    def handle_request(self, payload):
+        with self._lock:
+            self.entered += 1
+        self.gate.wait(10.0)
+        return payload
+
+
+def test_router_drain_waits_for_in_flight():
+    backend = _SlowBackend()
+    metrics = ServeMetrics()
+    router = OpenLoopRouter(
+        backend, RouterConfig(rate_rps=1000.0, max_outstanding=4), metrics
+    )
+    for i in range(6):            # 4 admitted, 2 rejected at the gate
+        router.dispatch(i, np.float64(i))
+    assert router.outstanding == 4
+    snap = metrics.snapshot()
+    assert snap["offered"] == 6 and snap["rejected"] == 2
+
+    done = threading.Event()
+    t = threading.Thread(
+        target=lambda: (router.drain(timeout=30.0), done.set()), daemon=True
+    )
+    t.start()
+    time.sleep(0.1)
+    assert not done.is_set()      # drain really waits on in-flight work
+    backend.gate.set()            # late completions finish now
+    assert done.wait(10.0)
+    assert router.outstanding == 0
+    snap = metrics.snapshot()
+    assert snap["completed"] == 4
+    assert snap["offered"] == snap["completed"] + snap["rejected"] + snap["failed"]
+    assert snap["failed"] == 0
+
+
+def test_router_drain_releases_replica_queue_slots():
+    """End-to-end: after drain, every replica queue slot acquired for an
+    admitted request has been released (late completions included)."""
+    rt = Runtime(num_nodes=4, executors_per_node=2)
+    release = threading.Event()
+
+    def slow_model(w, x):
+        release.wait(10.0)
+        return x * float(np.asarray(w).ravel()[0])
+
+    ens = EnsembleGroup(
+        rt, model_fn=slow_model,
+        config=EnsembleConfig(num_replicas=4, quorum=3,
+                              replica_queue_depth=4, request_timeout_s=30.0),
+    )
+    ens.deploy(np.full(1024, 2.0))
+    metrics = ens.metrics
+    router = OpenLoopRouter(
+        ens, RouterConfig(rate_rps=1000.0, max_outstanding=8), metrics
+    )
+    for i in range(10):
+        router.dispatch(i, np.full(16, float(i)))
+    time.sleep(0.2)
+    assert router.outstanding > 0
+    release.set()
+    router.drain(timeout=60.0)
+
+    assert router.outstanding == 0
+    deadline = time.time() + 10.0   # straggler callbacks release slots
+    while time.time() < deadline and any(
+        r.queue.inflight for r in ens.replicas
+    ):
+        time.sleep(0.05)
+    assert all(r.queue.inflight == 0 for r in ens.replicas)
+    snap = metrics.snapshot()
+    assert snap["offered"] == 10
+    assert snap["offered"] == snap["completed"] + snap["rejected"] + snap["failed"]
+    assert snap["failed"] == 0 and len(router.errors) == 0
