@@ -39,6 +39,13 @@ ensemble serving) blocks on.  It is the source of the tracked
     out after the spike); tracked runs assert autoscaled p99 <= 2x the
     fixed fleet's while shedding <= 0.6x its rejections, with the fleet
     drained home and zero failed requests.
+  * ``churned_allreduce`` -- the elastic-reduce acceptance scenario: an
+    8-way allreduce whose member set changes mid-chain (one seeded join
+    spliced into the in-flight chain, one seeded drain handed off);
+    tracked runs assert the elastic arm completes the SAME collective
+    with the exact 9-way sum and ``dropped == ()`` in <= 1.5x the
+    churn-free clean arm, vs a restart-on-change baseline that re-runs
+    the collective from scratch.
 
 Besides wall-clock, every scenario reports *contention counters*:
 
@@ -529,6 +536,49 @@ def bench_noisy_allreduce(nbytes, chunk_size, strict=True, rounds=None):
     base_p99, unb_p99, bnd_p99 = (
         lat["baseline"]["p99"], lat["unbounded"]["p99"], lat["bounded"]["p99"]
     )
+
+    # Simulator cross-check (apples-to-apples baseline noise): the SAME
+    # FaultPlan drives the discrete-event arms, RayStyle included, so a
+    # noisy Hoplite is compared against an equally-noisy Ray baseline
+    # instead of a noise-free one.
+    def sim_allreduce(plane: str, plan):
+        from repro.core.simulation import (
+            ClusterSpec, Hoplite, RayStyle, SimCluster,
+        )
+
+        spec = ClusterSpec(num_nodes=NUM_NODES)
+        c = SimCluster(spec, faults=FaultInjector(plan) if plan else None)
+        api = Hoplite(c) if plane == "hoplite" else RayStyle(c)
+        for i in range(NUM_NODES):
+            api.put(i, f"g{i}", nbytes)
+        c.sim.run()
+        t0 = c.sim.now
+        oids = {f"g{i}": i for i in range(NUM_NODES)}
+        if plane == "hoplite":
+            api.allreduce(list(range(NUM_NODES)), oids, "sum", nbytes)
+        else:
+            # Ray has no allreduce: gather-reduce at the root, then
+            # every other node fetches the result from the producer.
+            red = api.reduce(0, "sum", oids, nbytes)
+            red.add_waiter(
+                lambda _e: [
+                    api.get(n, "sum", to_executor=False)
+                    for n in range(1, NUM_NODES)
+                ]
+            )
+        c.sim.run()
+        return c.sim.now - t0
+
+    sim = {
+        f"{plane}_{arm}": round(sim_allreduce(plane, plan), 6)
+        for plane in ("hoplite", "ray")
+        for arm, plan in (("clean", None), ("noisy", noisy_plan))
+    }
+    # The injected noise must actually land in BOTH sim arms -- the whole
+    # point of apples-to-apples baselines.
+    assert sim["hoplite_noisy"] > sim["hoplite_clean"], sim
+    assert sim["ray_noisy"] > sim["ray_clean"], sim
+
     extras = {
         "arm_latency": lat,
         "latency": lat["bounded"],
@@ -541,6 +591,10 @@ def bench_noisy_allreduce(nbytes, chunk_size, strict=True, rounds=None):
         "pace": pace,
         "pace_chunk": pace_chunk,
         "rounds": rounds,
+        "sim_arms": sim,
+        "sim_noisy_hoplite_vs_ray_x": round(
+            sim["hoplite_noisy"] / sim["ray_noisy"], 3
+        ),
     }
     # Structural invariants at any payload: every bounded round must have
     # cut EXACTLY the straggler's contribution.
@@ -900,6 +954,191 @@ def bench_elastic_serving(nbytes, chunk_size, strict=True, rounds=None):
     return dt, moved, counters, extras
 
 
+def bench_churned_allreduce(nbytes, chunk_size, strict=True, rounds=None):
+    """Elastic-reduce acceptance scenario (ISSUE 9): an 8-way allreduce
+    whose MEMBER SET changes mid-chain -- one seeded join (node 8 arrives
+    with a late contribution, spliced into the in-flight chain through
+    ``splice_contribution``) and one seeded drain (node 5 leaves on
+    purpose; its bytes hand off via evacuation or the consumer's lineage
+    rebuild).  Three arms per round, paired on fresh clusters:
+
+      * ``clean``   -- all 9 members present from the start, no churn:
+        the wall-clock floor the elastic arm is gated against;
+      * ``elastic`` -- 8 seed members; a seeded ``FaultPlan`` storm lands
+        the join (put ``g8`` + splice) and the drain mid-reduce, and the
+        SAME in-flight collective completes with the exact 9-way sum and
+        ``dropped == ()`` -- a drain is never a cut;
+      * ``restart`` -- restart-on-membership-change baseline: the
+        collective is re-run from scratch over the post-churn member set
+        (what a static-membership plane must do).
+
+    Structural invariants at any payload: the splice is accepted, the
+    elastic sum is exactly the 9-way fold, ``dropped == ()``, and the
+    ``splice-join``/``splice-drain`` trace instants equal the
+    ``splices_join + splices_drain`` stats.  Tracked runs (strict, full
+    payload) gate elastic wall-clock <= 1.5x the churn-free clean arm
+    (min over rounds).
+    """
+    from repro.core.faults import FaultInjector, FaultPlan, FaultToleranceConfig
+    from repro.core.local import LocalCluster
+    from repro.core.trace import CAT_CHAIN
+
+    windows = 16
+    pace_chunk = max(64 * 1024, -(-nbytes // windows))
+    pace_chunk += (-pace_chunk) % 64
+    pace = 0.003
+    rounds = rounds if rounds is not None else (3 if nbytes >= 4 * MB else 2)
+    ft = FaultToleranceConfig(stall_timeout=1.0, watermark_recheck_s=0.25)
+    joiner, drained = NUM_NODES, 5
+    # Per-node compute stagger keeps the chain in flight for ~0.8 s; the
+    # drained node contributes FIRST so its bytes exist before the storm
+    # can land the drain (churn times draw from [0.2, 0.7] * duration).
+    delays = [0.1 * i for i in range(NUM_NODES)]
+    delays[drained] = 0.0
+    duration = 1.0
+    plan = FaultPlan.storm(
+        11, NUM_NODES, duration=duration, kills=0, jitter_s=0.0,
+        join_nodes=(joiner,), drain_nodes=(drained,), drain_deadline=30.0,
+    )
+    vals = [np.random.RandomState(500 + i).rand(nbytes // 8)
+            for i in range(NUM_NODES + 1)]
+    srcs = [f"g{i}" for i in range(NUM_NODES)]
+    expect_all = sum(vals)
+
+    def staggered_puts(c, ids, node_delays):
+        threads = []
+        for i, d in node_delays:
+            def work(i=i, d=d):
+                time.sleep(d)
+                c.put(i, f"g{i}", vals[i])
+            t = threading.Thread(target=work, daemon=True)
+            threads.append(t)
+        for t in threads:
+            t.start()
+        return threads
+
+    def clean_arm(rnd):
+        c = LocalCluster(NUM_NODES + 1, chunk_size=pace_chunk, pace=pace,
+                         fault_tolerance=ft)
+        node_delays = [(i, delays[i]) for i in range(NUM_NODES)]
+        node_delays.append((joiner, 0.45 * duration))  # joiner-equivalent
+        t0 = time.perf_counter()
+        threads = staggered_puts(c, srcs, node_delays)
+        c.allreduce(
+            list(range(NUM_NODES + 1)), "sum", srcs + [f"g{joiner}"],
+            timeout=300.0,
+        )
+        dt = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=60.0)
+        np.testing.assert_allclose(c.get(0, "sum", timeout=60.0),
+                                   expect_all, rtol=1e-10)
+        return dt
+
+    def elastic_arm(rnd):
+        inj = FaultInjector(plan)
+        c = LocalCluster(NUM_NODES, chunk_size=pace_chunk, pace=pace,
+                         fault_tolerance=ft, faults=inj, trace=True)
+        snap = attach_counters(c)
+        spliced = {}
+
+        def on_join(n):
+            c.put(n, f"g{joiner}", vals[joiner])
+            spliced["accepted"] = c.splice_contribution("sum", f"g{joiner}")
+
+        inj.on_join = on_join
+        node_delays = [(i, delays[i]) for i in range(NUM_NODES)]
+        t0 = time.perf_counter()
+        threads = staggered_puts(c, srcs, node_delays)
+        inj.start(c)
+        # Unbounded = fully streaming: the chain is in flight from the
+        # first Put, which is what the mid-chain splice rides.  The
+        # result still carries the participation contract (dropped must
+        # be empty -- a drain is a handoff, not a cut).
+        res = c.allreduce(list(range(NUM_NODES)), "sum", srcs, timeout=300.0)
+        dt = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=60.0)
+        inj.stop()
+        assert spliced.get("accepted"), (
+            "mid-chain join splice was rejected -- chain closed too early"
+        )
+        assert list(getattr(res, "dropped", ())) == [], res.dropped
+        assert not getattr(res, "cut", False)
+        np.testing.assert_allclose(c.get(0, "sum", timeout=60.0),
+                                   expect_all, rtol=1e-10)
+        stats = snap()
+        inst = sum(
+            1 for e in c.trace.events()
+            if e[3] == CAT_CHAIN and e[4] in ("splice-join", "splice-drain")
+        )
+        n_splices = stats.get("splices_join", 0) + stats.get("splices_drain", 0)
+        assert inst == n_splices, (inst, n_splices)
+        assert stats.get("splices_join", 0) >= 1, stats
+        return dt, stats
+
+    def restart_arm(rnd):
+        inj = FaultInjector(plan)
+        c = LocalCluster(NUM_NODES, chunk_size=pace_chunk, pace=pace,
+                         fault_tolerance=ft, faults=inj)
+        inj.on_join = lambda n: c.put(n, f"g{joiner}", vals[joiner])
+        node_delays = [(i, delays[i]) for i in range(NUM_NODES)]
+        epoch0 = c.membership_epoch
+        t0 = time.perf_counter()
+        threads = staggered_puts(c, srcs, node_delays)
+        inj.start(c)
+        c.allreduce(list(range(NUM_NODES)), "sum", srcs, timeout=300.0)
+        # Membership changed mid-collective: a static-membership plane
+        # must re-run over the new member set.  Wait for both churn
+        # events to have been applied, then run the whole collective
+        # again.
+        limit = time.time() + 30.0
+        while len(inj.log) < 2 and time.time() < limit:
+            time.sleep(0.01)
+        assert c.membership_epoch > epoch0
+        alive = [n for n in range(NUM_NODES + 1) if n != drained]
+        c.allreduce(alive, "sum2", srcs + [f"g{joiner}"], timeout=300.0)
+        dt = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=60.0)
+        inj.stop()
+        np.testing.assert_allclose(c.get(0, "sum2", timeout=60.0),
+                                   expect_all, rtol=1e-10)
+        return dt
+
+    arms = {"clean": [], "elastic": [], "restart": []}
+    counters = {}
+    for rnd in range(rounds):
+        arms["clean"].append(clean_arm(rnd))
+        de, counters = elastic_arm(rnd)
+        arms["elastic"].append(de)
+        arms["restart"].append(restart_arm(rnd))
+    clean_t, elastic_t, restart_t = (
+        min(arms["clean"]), min(arms["elastic"]), min(arms["restart"])
+    )
+    extras = {
+        "latency": _latency_summary(arms["elastic"]),
+        "arm_latency": {k: _latency_summary(v) for k, v in arms.items()},
+        "arm_seconds": {k: [round(v, 6) for v in vs] for k, vs in arms.items()},
+        "elastic_vs_clean_x": round(elastic_t / clean_t, 3),
+        "restart_vs_elastic_x": round(restart_t / elastic_t, 3),
+        "splices_join": counters.get("splices_join", 0),
+        "splices_drain": counters.get("splices_drain", 0),
+        "pace": pace,
+        "pace_chunk": pace_chunk,
+        "rounds": rounds,
+        "churn": {"join": joiner, "drain": drained, "storm_seed": plan.seed},
+    }
+    if strict and nbytes >= 4 * MB:
+        assert elastic_t <= 1.5 * clean_t, (
+            f"elastic allreduce {elastic_t:.3f}s exceeds 1.5x the churn-free "
+            f"clean arm {clean_t:.3f}s"
+        )
+    dt = elastic_t
+    moved = nbytes * 2 * (NUM_NODES - 1)
+    return dt, moved, counters, extras
+
+
 SCENARIOS = [
     ("p2p", bench_p2p),
     ("broadcast", bench_broadcast),
@@ -910,6 +1149,7 @@ SCENARIOS = [
     ("allreduce_scaling", bench_allreduce_scaling),
     ("noisy_allreduce", bench_noisy_allreduce),
     ("elastic_serving", bench_elastic_serving),
+    ("churned_allreduce", bench_churned_allreduce),
 ]
 
 
@@ -923,7 +1163,7 @@ def run_suite(quick: bool = False, strict: bool = True):
             {"strict": strict}
             if name in (
                 "broadcast_scaling", "allreduce_scaling", "noisy_allreduce",
-                "elastic_serving",
+                "elastic_serving", "churned_allreduce",
             )
             else {}
         )

@@ -359,6 +359,22 @@ class ObjectDirectory:
                     return False
         return True
 
+    def producing_at(self, object_id: str, node: int) -> bool:
+        """True when ``node`` holds a *producing* partial of
+        ``object_id`` -- a reduce-chain target/hop output still being
+        generated locally.  The drain handoff's work-list predicate:
+        ``sole_holder`` deliberately ignores partials (a receiver copy
+        elsewhere can finish from another source), but a producing partial
+        IS the chain's only accumulated state, so a drain must hand it
+        off -- wait for local completion and evacuate -- rather than
+        leave with it."""
+        for pool in (self._shard(object_id).locations,
+                     self._shard(object_id).checked_out):
+            loc = pool.get(object_id, {}).get(node)
+            if loc is not None and loc.producing:
+                return True
+        return False
+
     def checkout_location(
         self, object_id: str, *, remove: bool = True, exclude: Optional[int] = None
     ) -> Optional[Location]:
@@ -515,8 +531,14 @@ class ObjectDirectory:
                 dropped |= shard.checked_out[object_id].pop(node, None) is not None
                 if dropped:
                     affected.append((shard, object_id))
-                if not shard.locations[object_id] and not shard.checked_out[object_id]:
-                    if object_id not in shard.inline:
+                    # Only an object that actually LOST a copy here can be
+                    # orphaned by this failure: a subscribed-but-never-Put
+                    # id has an (empty) location entry too, and counting it
+                    # would make a drain racing a reduce whose sources are
+                    # still being produced report phantom loss.
+                    if (not shard.locations[object_id]
+                            and not shard.checked_out[object_id]
+                            and object_id not in shard.inline):
                         orphaned.append(object_id)
         for shard, object_id in affected:
             self._notify(shard, object_id)

@@ -47,7 +47,7 @@ import math
 import random
 import threading
 import time
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.trace import CAT_FAULT
 
@@ -285,6 +285,16 @@ class FaultInjector:
     def __init__(self, plan: Optional[FaultPlan] = None):
         self.plan = plan or FaultPlan()
         self._drain_deadlines = {d.node: d.deadline for d in self.plan.drains}
+        # Post-event hooks: called (best-effort, off the replay log) with
+        # the node id AFTER a churn event lands -- ``on_join`` right after
+        # ``add_node`` returns, ``on_drain`` right after ``drain_node``
+        # returns.  Chaos tests use them to stage the joiner's
+        # contribution (put + ``splice_contribution``) at the
+        # deterministic storm instant without polling membership.  They
+        # never touch ``self.log``, so the deterministic-replay contract
+        # (log == timeline) is unchanged whether or not hooks are set.
+        self.on_join: Optional[Callable[[int], None]] = None
+        self.on_drain: Optional[Callable[[int], None]] = None
         # Slowdown windows: static stragglers plus the crawl phase of
         # every flaky kill, all queried through one slow_factor().
         self._windows: List[Tuple[int, float, float, float]] = [
@@ -419,6 +429,8 @@ class FaultInjector:
                 # an exception must not kill the driver thread mid-storm.
                 try:
                     cluster.add_node(node)
+                    if self.on_join is not None:
+                        self.on_join(node)
                 except Exception:  # noqa: BLE001
                     pass
             elif kind == "drain":
@@ -429,6 +441,8 @@ class FaultInjector:
                 def _drain(node=node, deadline=deadline):
                     try:
                         cluster.drain_node(node, deadline=deadline)
+                        if self.on_drain is not None:
+                            self.on_drain(node)
                     except Exception:  # noqa: BLE001
                         pass
 
@@ -468,10 +482,14 @@ class FaultInjector:
         try:
             if kind == "join":
                 cluster.add_node(node)
+                if self.on_join is not None:
+                    self.on_join(node)
             else:
                 cluster.drain_node(
                     node, deadline=self._drain_deadlines.get(node, 10.0)
                 )
+                if self.on_drain is not None:
+                    self.on_drain(node)
         except Exception:  # noqa: BLE001 -- best-effort, always logged
             pass
         with self._log_lock:

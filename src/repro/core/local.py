@@ -77,9 +77,12 @@ from repro.core.faults import FaultInjector, FaultPlan, FaultToleranceConfig
 from repro.core.planner import (
     LinkSpec,
     EC2_LINK,
+    SPLICE_REJECT,
+    SPLICE_TAIL,
     allreduce_policy,
     bounded_time_participants,
     broadcast_policy,
+    splice_mode,
     use_two_dimensional,
 )
 from repro.core.scheduler import ChainState, partition_groups
@@ -89,6 +92,7 @@ from repro.core.trace import (
     CAT_FETCH,
     CAT_MEMBERSHIP,
     CAT_STREAM,
+    RESPLICE_MEMBER_CHANGE,
     FlightRecorder,
     STAGE_CAP_BLOCKED,
     STAGE_PLAN,
@@ -172,6 +176,35 @@ class AllreduceResult(str):
         return self
 
 
+class _ChainHandle:
+    """Registry entry for one in-flight reduce chain (``_active_chains``).
+
+    Bridges the public member-change splice API
+    (``LocalCluster.splice_contribution``) and the chain's single-threaded
+    coordinator loop: accepted *tail* splices land in ``extra_pending``
+    (drained by ``_run_chain`` under ``lock``, so the coordinator's
+    ``pending`` set stays single-threaded), accepted late *side*
+    contributions in ``late`` (folded by ``_finalize_chain`` as extra
+    operands of the finalization fold).  ``fold_frontier`` flips positive
+    the moment the finalization fold freezes its input set: from then on
+    the target's prefix bytes are immutable (broadcast chasers may already
+    hold copies of them) and new contributions are rejected."""
+
+    __slots__ = ("chain", "node", "lock", "wake", "extra_pending", "late",
+                 "chain_active", "fold_frontier", "closed")
+
+    def __init__(self, chain: ChainState, node: int):
+        self.chain = chain
+        self.node = node
+        self.lock = threading.Lock()
+        self.wake: Optional[threading.Event] = None  # coordinator loop's event
+        self.extra_pending: List[str] = []  # accepted tail splices, not yet admitted
+        self.late: List[str] = []  # accepted side-contributions for finalization
+        self.chain_active = True  # coordinator loop still consuming sources
+        self.fold_frontier = 0  # >0 once the finalization fold's inputs froze
+        self.closed = False  # chain finished/failed: no splice can ever land
+
+
 class LocalCluster:
     """An in-process Hoplite deployment."""
 
@@ -238,6 +271,25 @@ class LocalCluster:
         # can serve as sole sources) but soft-avoided for new selections
         # and skipped for new placements until the drain completes.
         self.draining: set = set()
+        # Monotonic membership epoch, bumped under the directory lock on
+        # every member-set delta (join / drain / kill / restart).  An
+        # in-flight chain snapshots it at creation (``ChainState.epoch``)
+        # and advances its own copy per accepted member-change splice.
+        self.membership_epoch = 0
+        # target_id -> _ChainHandle for every in-flight reduce chain (2-D
+        # group chains register under their sub-target ids as well);
+        # ``splice_contribution`` routes member-change splices through it.
+        self._active_chains: Dict[str, _ChainHandle] = {}
+        # node id -> epoch at which it drained away (cleared when the id
+        # re-joins).  Chain consumers use it to classify a tail rebuild as
+        # a drain HANDOFF (``splices_drain`` + ``splice-drain`` instants)
+        # rather than a failure re-splice -- ``resplices`` and the
+        # ``resplice`` instants must keep matching exactly.
+        self._drained: Dict[int, int] = {}
+        # object id -> draining/drained holder: contributions mid-handoff.
+        # Bounded-time allreduce waits these out against the hard deadline
+        # instead of counting them as stragglers -- a drain is never a cut.
+        self._drain_handoffs: Dict[str, int] = {}
         # Control-plane (directory) lock; exposed as ``lock`` for
         # compatibility.  The data plane does NOT take it per chunk.
         self._dir_lock = threading.RLock()
@@ -378,6 +430,38 @@ class LocalCluster:
         """Caller must hold the directory lock."""
         for ev in self._membership_waiters:
             ev.set()
+
+    def _bump_epoch(self) -> int:
+        """Advance the membership epoch -- one transition per member-set
+        delta (join, drain, kill, restart).  Caller holds the directory
+        lock.  In-flight chains carry the epoch they last spliced under,
+        so the trace can attribute every divergence from a chain's
+        start-time member set to a specific transition."""
+        self.membership_epoch += 1
+        return self.membership_epoch
+
+    def _is_drain_handoff(self, cause_node: Optional[int]) -> bool:
+        """True when a chain tail rebuild was caused by a *drained* member
+        (planned departure: its chain position is handed off and counted
+        in ``splices_drain``) rather than a failure (``resplices``).  The
+        split keeps the failure-re-splice invariant exact: trace
+        ``resplice`` instants == ``stats["resplices"]``."""
+        return cause_node is not None and cause_node in self._drained
+
+    def _drain_protected(self, object_id: str) -> bool:
+        """True when ``object_id``'s arrival is gated on a planned drain
+        handoff rather than a straggler: a live copy sits at a draining
+        member, or its holder drained after handing the bytes off
+        (``_drain_handoffs``).  Bounded-time allreduce waits these out
+        against the hard deadline instead of counting them in
+        ``AllreduceResult.dropped`` -- a drain is never a cut."""
+        with self._dir_lock:
+            if object_id in self._drain_handoffs:
+                return True
+            return any(
+                l.node in self.draining
+                for l in self.directory.locations(object_id)
+            )
 
     def _object_lost(self, object_id: str) -> bool:
         """True when the object WAS created (meta or tombstone exists) but
@@ -984,6 +1068,49 @@ class LocalCluster:
             node, target_id, list(source_ids), op, deadline, meta=_meta
         )
 
+    def splice_contribution(self, target_id: str, source_id: str) -> bool:
+        """Member-change splice: offer ``source_id`` (typically a joiner's
+        contribution Put after the collective started) to the in-flight
+        reduce chain producing ``target_id``.
+
+        The epoch-versioned chain contract is shared with the simulator
+        through ``planner.splice_mode``: while the chain coordinator is
+        still consuming sources the contribution is spliced into the chain
+        *tail* (same ``op(a, b)`` association any start-time member would
+        get); after the chain closed but before the finalization fold
+        froze its input set, it folds as a late *side* contribution (exact
+        by associativity/commutativity of the elementwise op); once the
+        fold frontier moved, the target's prefix bytes are immutable
+        (broadcast chasers may already hold them) and the offer is
+        rejected.  The source must already be *available* (Put somewhere,
+        or directory-inline) -- offer after the Put.
+
+        Returns True iff the contribution WILL be folded into the target.
+        Accepted splices are counted in ``splices_join`` and emit one
+        ``splice-join`` trace instant each (reason ``member-change``), so
+        the trace and the stat always agree."""
+        with self._dir_lock:
+            handle = self._active_chains.get(target_id)
+            if handle is None:
+                return False
+            if not self.directory.is_available(source_id):
+                return False  # nothing to splice yet: Put the bytes first
+        with handle.lock:
+            if handle.closed:
+                return False
+            mode = splice_mode(handle.chain_active, handle.fold_frontier, 0.0)
+            if mode == SPLICE_REJECT:
+                return False
+            if mode == SPLICE_TAIL:
+                handle.extra_pending.append(source_id)
+                wake = handle.wake
+            else:
+                handle.late.append(source_id)
+                wake = None
+        if wake is not None:
+            wake.set()  # coordinator loop admits the splice on next wakeup
+        return True
+
     def allreduce(
         self,
         nodes: Sequence[int],
@@ -1086,8 +1213,25 @@ class LocalCluster:
                 # collective.  Swallow its eventual error, if any.
                 f.add_done_callback(lambda fu: fu.exception())
                 continue
-            f.result(timeout=max(0.0, deadline - time.time()))
-        return target_id
+            try:
+                f.result(timeout=max(0.0, deadline - time.time()))
+            except Exception:
+                # A receiver that DRAINED mid-collective left on purpose
+                # and no longer needs its inbound copy: drop it from the
+                # await set instead of failing the collective.  Crashes
+                # (kills) still raise -- only planned departures are
+                # forgiven.
+                with self._dir_lock:
+                    left = n in self._drained or n in self.draining
+                if not left:
+                    raise
+        # Full participation (still an ``AllreduceResult`` so callers can
+        # uniformly read ``dropped``/``mask`` -- a streaming collective
+        # that absorbed member churn reports dropped == () here).
+        return AllreduceResult(
+            target_id, participants=list(source_ids), dropped=(),
+            mask=tuple(True for _ in source_ids), cut=False,
+        )
 
     def _allreduce_bounded(
         self,
@@ -1181,6 +1325,31 @@ class LocalCluster:
             sc.close()
 
         ready_set = set(ready)
+        protected = [
+            oid for oid in source_ids
+            if oid not in ready_set and self._drain_protected(oid)
+        ]
+        if protected:
+            # An outstanding source is mid-handoff from a *draining*
+            # member (planned departure, not a straggler): wait for its
+            # evacuated copy against the hard deadline before cutting, so
+            # a drain is never counted in ``dropped`` / ``straggler_cuts``.
+            def attempt_handoffs():
+                r = ready_ids()
+                rs = set(r)
+                if all(oid in rs or self._object_lost(oid) for oid in protected):
+                    return r
+                return None
+
+            try:
+                ready = self._await_directory(
+                    source_ids, attempt_handoffs, hard_deadline,
+                    what=f"allreduce {target_id}: drain handoff never landed",
+                )
+                ready_set = set(ready)
+            except TimeoutError:
+                pass  # hard deadline: fall back to the straggler cut
+
         chosen = [oid for oid in source_ids if oid in ready_set]
         dropped = [oid for oid in source_ids if oid not in ready_set]
         mask = tuple(oid in ready_set for oid in source_ids)
@@ -1307,7 +1476,8 @@ class LocalCluster:
         that id onto the ready queue, so the loop examines only the ids
         that actually changed -- O(events) total work instead of the old
         O(pending^2) full re-scan on every cluster-global wakeup."""
-        chain = ChainState(node, tag=target_id)
+        chain = ChainState(node, tag=target_id, epoch=self.membership_epoch)
+        handle = _ChainHandle(chain, node)
         hop_futures: List[Future] = []
         intermediates: List[str] = []  # chain-generated partials to reclaim
         if meta is None:
@@ -1316,10 +1486,15 @@ class LocalCluster:
         dtype, shape = meta
         size = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
         self._advertise_reduce_target(node, target_id, dtype, shape, size)
+        with self._dir_lock:
+            # Register the chain for member-change splices (2-D group
+            # chains register under their sub-target ids: a joiner can be
+            # spliced into whichever chain the caller names).
+            self._active_chains[target_id] = handle
         try:
             return self._run_chain(
                 chain, node, target_id, source_ids, op, deadline,
-                dtype, shape, hop_futures, intermediates,
+                dtype, shape, hop_futures, intermediates, handle,
             )
         except BaseException:
             # Withdraw the producing advertisement (and fail any partial
@@ -1328,6 +1503,11 @@ class LocalCluster:
             self._abandon_partial(node, target_id, always_drop=True)
             raise
         finally:
+            with handle.lock:
+                handle.closed = True  # no splice can land past this point
+            with self._dir_lock:
+                if self._active_chains.get(target_id) is handle:
+                    del self._active_chains[target_id]
             # Reclaim chain partials on success AND failure (hop outputs
             # are pinned at their nodes; a failed reduce must not leak one
             # pinned set per retry).  Deleting an intermediate a still-
@@ -1338,11 +1518,12 @@ class LocalCluster:
 
     def _run_chain(
         self, chain, node, target_id, source_ids, op, deadline,
-        dtype, shape, hop_futures, intermediates,
+        dtype, shape, hop_futures, intermediates, handle=None,
     ) -> str:
         pending = set(source_ids)
         ready_q: collections.deque = collections.deque()
         ev = threading.Event()
+        spliced: set = set()  # member-change splices admitted to ``pending``
 
         def cb(oid):
             ready_q.append(oid)
@@ -1358,8 +1539,48 @@ class LocalCluster:
             # (and fail the reduce) on the first pass.
             ready_q.extend(ids)
             ev.set()
+        if handle is not None:
+            with handle.lock:
+                handle.wake = ev  # splice_contribution wakes the loop
+
+        def admit_splices() -> None:
+            """Move accepted member-change tail splices (a joiner's late
+            contribution) into the pending set.  Runs on the coordinator
+            thread only, so ``pending`` stays single-threaded --
+            ``splice_contribution`` merely queues ids under the handle
+            lock and sets ``ev``."""
+            if handle is None:
+                return
+            with handle.lock:
+                extra = [o for o in handle.extra_pending
+                         if o not in pending and o not in spliced]
+                handle.extra_pending.clear()
+            if not extra:
+                return
+            with self._dir_lock:
+                for oid in extra:
+                    self.directory.subscribe(oid, cb)
+                ready_q.extend(extra)
+                ev.set()
+            spliced.update(extra)
+            ids.extend(o for o in extra if o not in ids)  # finally-unsubscribe
+            pending.update(extra)
+
         try:
-            while pending:
+            while True:
+                admit_splices()
+                if not pending:
+                    if handle is None:
+                        break
+                    # Close the tail-splice window race-free: a splice
+                    # accepted after admit_splices() above would be
+                    # stranded, so only flip the chain inactive while the
+                    # handle lock shows the splice queue empty.
+                    with handle.lock:
+                        if not handle.extra_pending:
+                            handle.chain_active = False
+                            break
+                    continue
                 remaining = deadline - time.time()
                 if remaining <= 0 or not ev.wait(timeout=remaining):
                     raise TimeoutError(f"reduce: sources never ready: {pending}")
@@ -1418,7 +1639,22 @@ class LocalCluster:
                     else:
                         src = node
                     pending.discard(oid)
-                    hop = chain.on_ready(src, oid)
+                    if oid in spliced:
+                        # Epoch-versioned member-change splice: the joiner
+                        # becomes the new chain tail -- same ``op(a, b)``
+                        # association as any start-time member, but
+                        # counted/logged separately from failure
+                        # re-splices (``resplices`` stays exact).
+                        hop = chain.splice_source(src, oid, self.membership_epoch)
+                        self._stats.splices_join += 1
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_CHAIN, "splice-join", node, target_id,
+                                reason=RESPLICE_MEMBER_CHANGE, source=oid,
+                                mode="tail", epoch=chain.epoch,
+                            )
+                    else:
+                        hop = chain.on_ready(src, oid)
                     if hop is not None:
                         intermediates.append(hop.out_object)
                         hop_futures.append(
@@ -1427,16 +1663,22 @@ class LocalCluster:
                             )
                         )
         finally:
+            if handle is not None:
+                with handle.lock:
+                    handle.chain_active = False
+                    handle.wake = None
             with self._dir_lock:
                 for oid in ids:
                     self.directory.unsubscribe(oid, cb)
                 self._membership_waiters.discard(ev)
         return self._finalize_chain(
-            chain, node, target_id, op, deadline, dtype, shape, hop_futures
+            chain, node, target_id, op, deadline, dtype, shape, hop_futures,
+            handle,
         )
 
     def _finalize_chain(
-        self, chain, node, target_id, op, deadline, dtype, shape, hop_futures
+        self, chain, node, target_id, op, deadline, dtype, shape, hop_futures,
+        handle=None,
     ) -> str:
         """Stream the chain tail + receiver-local sources into the pinned
         target buffer window-by-window, gated on every input's watermark.
@@ -1482,35 +1724,65 @@ class LocalCluster:
         if final is not None:
             src_node, src_buf = self._resolve_tail(final, node, chain.lineage,
                                                    dtype, shape, op, deadline,
-                                                   stage=sc)
+                                                   stage=sc, chain=chain)
         else:
             src_node, src_buf = None, None
+        # Freeze the fold's input set: accepted late *side* splices join
+        # as extra operands now; later offers are rejected (the first
+        # window makes the target's prefix bytes immutable).
+        late_inputs = self._drain_side_splices(handle, chain, node, target_id)
         need_rebuild = False
+        cause: Optional[int] = None  # node whose loss forced the rebuild
         rebuild_avoid: FrozenSet[int] = frozenset()
         while True:
             if need_rebuild:
-                # Tail died / was abandoned / stalled mid-stream:
-                # re-splice -- fold resumes from the target's own
-                # watermark below, with a replacement rebuilt from
-                # still-live copies (stalled holders soft-avoided).
-                self._stats.resplices += 1
-                sc.switch(STAGE_RESPLICE)
-                if self.trace.enabled:
-                    self.trace.instant(
-                        CAT_CHAIN, "resplice", node, target_id,
-                        rebuilt=final.src_object, at=out.bytes_present,
+                if final is not None:
+                    # Tail died / was abandoned / stalled mid-stream:
+                    # re-splice -- fold resumes from the target's own
+                    # watermark below, with a replacement rebuilt from
+                    # still-live copies (stalled holders soft-avoided).
+                    # A *drained* tail holder is a planned handoff, not a
+                    # failure: it counts in ``splices_drain`` (and its
+                    # own instant), never in ``resplices``.
+                    sc.switch(STAGE_RESPLICE)
+                    if self._is_drain_handoff(cause):
+                        self._stats.splices_drain += 1
+                        chain.note_drain_handoff(
+                            final.src_object, self.membership_epoch
+                        )
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_CHAIN, "splice-drain", node, target_id,
+                                reason=RESPLICE_MEMBER_CHANGE,
+                                rebuilt=final.src_object,
+                                at=out.bytes_present, drained=cause,
+                            )
+                    else:
+                        self._stats.resplices += 1
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_CHAIN, "resplice", node, target_id,
+                                rebuilt=final.src_object, at=out.bytes_present,
+                            )
+                    src_node, src_buf = node, self._rebuild_partial(
+                        node, final.src_object, chain.lineage, dtype, shape, op,
+                        deadline, avoid=rebuild_avoid,
                     )
-                src_node, src_buf = node, self._rebuild_partial(
-                    node, final.src_object, chain.lineage, dtype, shape, op,
-                    deadline, avoid=rebuild_avoid,
-                )
+                # Re-resolve side-splice inputs whose holder left
+                # (drained/died) mid-fold: another live copy or the
+                # directory inline entry takes over.
+                for i, (b_i, oid_i, src_i) in enumerate(late_inputs):
+                    if b_i.failed or (src_i is not None and src_i in self.dead):
+                        late_inputs[i] = self._side_input(node, oid_i)
                 need_rebuild = False
+                cause = None
             inputs: List[Tuple[ChunkedBuffer, str, Optional[int]]] = []
             if src_buf is not None:
                 inputs.append(
                     (src_buf, final.src_object, src_node if src_node != node else None)
                 )
             inputs.extend(locals_in)
+            inputs.extend(late_inputs)
             epoch = None
             if src_node is not None and src_node != node:
                 with self._dir_lock:
@@ -1530,18 +1802,20 @@ class LocalCluster:
                 )
                 break
             except DeadNode as e:
-                if e.node_id == node or final is None:
+                if e.node_id == node or (final is None and not late_inputs):
                     raise
                 need_rebuild = True
+                cause = e.node_id
             except StaleBuffer:
-                if final is None:
+                if final is None and not late_inputs:
                     raise ObjectLost(target_id)
                 need_rebuild = True
+                cause = src_node if src_node != node else None
             except SourceStalled as e:
                 # The tail wedged (not died) past the stall budget: evict
                 # it and re-splice from lineage / a live copy elsewhere,
                 # resuming from the target watermark.
-                if final is None:
+                if final is None and not late_inputs:
                     raise ObjectLost(target_id)
                 self._stats.stall_replans += 1
                 if self.trace.enabled:
@@ -1579,8 +1853,65 @@ class LocalCluster:
             self.directory.publish_complete(target_id, node, size)
         return target_id
 
+    def _drain_side_splices(
+        self, handle, chain, node, target_id
+    ) -> List[Tuple[ChunkedBuffer, str, Optional[int]]]:
+        """Freeze the finalization fold's input set and admit accepted
+        late *side* contributions (member-change splices that arrived
+        after the chain coordinator closed).  Flipping ``fold_frontier``
+        positive under the handle lock is what makes the freeze race-free:
+        ``splice_contribution`` holds the same lock for its tail/side/
+        reject decision, so an offer either lands in ``late`` before the
+        freeze or is rejected after it.  Returns the extra
+        ``_stream_fold`` inputs -- exact by associativity/commutativity of
+        the elementwise op."""
+        if handle is None:
+            return []
+        with handle.lock:
+            late_ids = list(handle.late)
+            handle.late.clear()
+            handle.fold_frontier = 1  # inputs frozen: reject from now on
+        inputs: List[Tuple[ChunkedBuffer, str, Optional[int]]] = []
+        for oid in late_ids:
+            entry = self._side_input(node, oid)
+            chain.splice_side(oid, self.membership_epoch)
+            self._stats.splices_join += 1
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_CHAIN, "splice-join", node, target_id,
+                    reason=RESPLICE_MEMBER_CHANGE, source=oid,
+                    mode="side", epoch=chain.epoch,
+                )
+            inputs.append(entry)
+        return inputs
+
+    def _side_input(
+        self, node: int, oid: str
+    ) -> Tuple[ChunkedBuffer, str, Optional[int]]:
+        """Fold input (buffer, oid, src_node) for a member-change side
+        contribution: a live COMPLETE/producing copy anywhere (streamed,
+        gated on its watermark like any fold input), else the directory
+        inline entry.  Raises ObjectLost when no copy survives."""
+        with self._dir_lock:
+            for l in self.directory.locations(oid):
+                if l.node in self.dead:
+                    continue
+                b = self.stores[l.node].get(oid)
+                if b is None or b.failed:
+                    continue
+                if l.progress is Progress.COMPLETE or l.producing:
+                    return (b, oid, l.node if l.node != node else None)
+            inline = self.directory.get_inline(oid)
+        if inline is not None:
+            return (
+                ChunkedBuffer.from_array(np.asarray(inline), stats=self._stats),
+                oid,
+                None,
+            )
+        raise ObjectLost(oid)
+
     def _resolve_tail(self, final, node, lineage, dtype, shape, op, deadline,
-                      stage: Optional[StageClock] = None):
+                      stage: Optional[StageClock] = None, chain=None):
         """Locate the chain tail's buffer for the final fold, waiting for
         the producing hop thread to create it (the hop-issue race), or
         rebuilding it locally when its node already died."""
@@ -1604,14 +1935,30 @@ class LocalCluster:
             what=f"reduce: tail {final.src_object} never appeared",
         )
         if got[0] == "rebuild":
-            self._stats.resplices += 1
             if stage is not None:
                 stage.switch(STAGE_RESPLICE)
-            if self.trace.enabled:
-                self.trace.instant(
-                    CAT_CHAIN, "resplice", node, final.src_object,
-                    rebuilt=final.src_object, at=0,
-                )
+            if self._is_drain_handoff(final.src_node):
+                # Planned departure of the tail holder: a handoff, never a
+                # failure re-splice (``resplices`` must stay exact).
+                self._stats.splices_drain += 1
+                if chain is not None:
+                    chain.note_drain_handoff(
+                        final.src_object, self.membership_epoch
+                    )
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_CHAIN, "splice-drain", node, final.src_object,
+                        reason=RESPLICE_MEMBER_CHANGE,
+                        rebuilt=final.src_object, at=0,
+                        drained=final.src_node,
+                    )
+            else:
+                self._stats.resplices += 1
+                if self.trace.enabled:
+                    self.trace.instant(
+                        CAT_CHAIN, "resplice", node, final.src_object,
+                        rebuilt=final.src_object, at=0,
+                    )
             return node, self._rebuild_partial(
                 node, final.src_object, lineage, dtype, shape, op, deadline
             )
@@ -1677,23 +2024,41 @@ class LocalCluster:
                         src=hop.src_node, src_object=hop.src_object,
                     )
                 src_node = hop.src_node
+                cause: Optional[int] = hop.src_node if need_rebuild else None
                 rebuild_avoid: FrozenSet[int] = frozenset()
                 while True:
                     if need_rebuild:
-                        self._stats.resplices += 1
                         sc.switch(STAGE_RESPLICE)
-                        if self.trace.enabled:
-                            self.trace.instant(
-                                CAT_CHAIN, "resplice", hop.dst_node,
-                                hop.out_object, rebuilt=hop.src_object,
-                                at=out.bytes_present,
-                            )
+                        if self._is_drain_handoff(cause):
+                            # The upstream holder *drained*: its chain
+                            # position hands off to this hop (the rebuild
+                            # below resumes the fold byte-identically) --
+                            # a ``splices_drain`` event, never a failure
+                            # ``resplice``.
+                            self._stats.splices_drain += 1
+                            if self.trace.enabled:
+                                self.trace.instant(
+                                    CAT_CHAIN, "splice-drain", hop.dst_node,
+                                    hop.out_object,
+                                    reason=RESPLICE_MEMBER_CHANGE,
+                                    rebuilt=hop.src_object,
+                                    at=out.bytes_present, drained=cause,
+                                )
+                        else:
+                            self._stats.resplices += 1
+                            if self.trace.enabled:
+                                self.trace.instant(
+                                    CAT_CHAIN, "resplice", hop.dst_node,
+                                    hop.out_object, rebuilt=hop.src_object,
+                                    at=out.bytes_present,
+                                )
                         src_buf = self._rebuild_partial(
                             hop.dst_node, hop.src_object, lineage,
                             dtype, shape, op, deadline, avoid=rebuild_avoid,
                         )
                         src_node = hop.dst_node
                         need_rebuild = False
+                        cause = None
                     epoch = None
                     if src_node != hop.dst_node:
                         with self._dir_lock:
@@ -1726,8 +2091,10 @@ class LocalCluster:
                         if e.node_id == hop.dst_node:
                             raise ObjectLost(hop.out_object)
                         need_rebuild = True  # re-splice from out watermark
+                        cause = e.node_id
                     except StaleBuffer:
                         need_rebuild = True
+                        cause = src_node if src_node != hop.dst_node else None
                     except SourceStalled as e:
                         # Wedged upstream partial: evict, re-splice from
                         # lineage / another live copy, resume the fold
@@ -2089,6 +2456,9 @@ class LocalCluster:
                 if store is not None:
                     store.delete(object_id)
             self.meta.pop(object_id, None)
+            # A deleted id sheds its drain protection: a later re-Put
+            # under the same id is an ordinary contribution again.
+            self._drain_handoffs.pop(object_id, None)
 
     def fail_node(self, node: int) -> List[str]:
         """Kill a node: all its copies vanish; returns orphaned object ids
@@ -2097,6 +2467,7 @@ class LocalCluster:
         with self._dir_lock:
             self.dead.add(node)
             self.draining.discard(node)  # a dead node is no longer draining
+            self._bump_epoch()
             old_store = self.stores.replace(node)
             orphaned = self.directory.fail_node(node)  # notifies subscribers
             self._wake_membership_waiters()
@@ -2108,6 +2479,10 @@ class LocalCluster:
     def restart_node(self, node: int):
         with self._dir_lock:
             self.dead.discard(node)
+            self._bump_epoch()
+            # A restarted id is a live member again: rebuilds of its lost
+            # objects are failure re-splices, not drain handoffs.
+            self._drained.pop(node, None)
             old_store = self.stores.replace(node)
             self.stores.add(node)  # re-establish membership (post-drain restarts)
             # Pre-restart streams are dead: zero the node's outbound load
@@ -2137,9 +2512,11 @@ class LocalCluster:
             self.stores.add(node)
             # A joiner starts with a clean outbound ledger.
             self.directory.reset_outbound(node)
+            epoch = self._bump_epoch()
+            self._drained.pop(node, None)  # a re-joined id is a member again
             self._stats.joins += 1
             if self.trace.enabled:
-                self.trace.instant(CAT_MEMBERSHIP, "joined", node, "")
+                self.trace.instant(CAT_MEMBERSHIP, "joined", node, "", epoch=epoch)
             self._wake_membership_waiters()
         return node
 
@@ -2155,9 +2532,14 @@ class LocalCluster:
              this node is proactively re-replicated to a staying member
              through the ordinary broadcast plane (``prefetch_async``
              from the draining holder -- the same receiver-driven path
-             as any other transfer).  Producing/in-flight partials are
-             left to their own pipelines (their consumers hold leading
-             copies elsewhere by construction).
+             as any other transfer).  Live *producing* chain partials
+             (a reduce target or hop output still being generated here)
+             are part of the work list too: the drain holds until they
+             complete locally (bounded by the deadline), then evacuates
+             them like any other sole copy -- the chain's accumulated
+             state is handed off, never forfeited.  In-flight *receiver*
+             partials are left to their own pipelines (their sources
+             hold leading copies elsewhere by construction).
           3. *Leave*: the node departs membership; the directory drops
              its locations.  The orphan list from that drop is the
              zero-loss proof -- it is empty iff evacuation covered
@@ -2176,9 +2558,11 @@ class LocalCluster:
                 raise DeadNode(str(node))
             self.draining.add(node)
             self.directory.set_draining(node, True)
+            epoch = self._bump_epoch()
             if self.trace.enabled:
                 self.trace.instant(
-                    CAT_MEMBERSHIP, "drain-start", node, "", deadline=deadline_s
+                    CAT_MEMBERSHIP, "drain-start", node, "",
+                    deadline=deadline_s, epoch=epoch,
                 )
             self._wake_membership_waiters()
         evacuated: List[str] = []
@@ -2186,20 +2570,49 @@ class LocalCluster:
             with self._dir_lock:
                 store = self.stores[node]
                 at_risk = []
+                producing_wait = []
                 for oid in self.directory.objects_at(node):
                     if not self.directory.sole_holder(oid, node):
                         continue
                     buf = store.get(oid)
+                    if buf is not None and buf.failed:
+                        continue
+                    if self.directory.producing_at(oid, node) and (
+                            buf is None or not buf.complete):
+                        # Live producing chain partial: the chain's only
+                        # accumulated state lives HERE (the old scan
+                        # skipped it -- a drain racing a long reduce
+                        # forfeited the contribution).  The buffer may
+                        # not even exist yet (targets are advertised
+                        # before their first byte).  Hold the drain until
+                        # it completes locally, then evacuate it like any
+                        # other sole copy; mark it mid-handoff so
+                        # bounded-time allreduce never counts it as a
+                        # straggler.
+                        producing_wait.append(oid)
+                        self._drain_handoffs.setdefault(oid, node)
+                        continue
                     if buf is None or not buf.complete:
-                        # In-flight/producing partial: its pipeline's
-                        # consumer (which leads it) owns recovery.
+                        # In-flight receiver partial: its own pipeline
+                        # (whose source leads it) owns recovery.
                         continue
                     at_risk.append(oid)
+                    self._drain_handoffs.setdefault(oid, node)
                 targets = [
                     i for i in self.stores.ids()
                     if i != node and i not in self.dead and i not in self.draining
                 ]
             if not at_risk or not targets:
+                if producing_wait and targets and time.time() < until:
+                    # Producing partials outstanding: poll briefly
+                    # (``wait_for_bytes`` would ride the producer's
+                    # steady window signals past the drain deadline),
+                    # then re-scan -- each becomes an ordinary sole
+                    # COMPLETE copy to evacuate on completion.  If the
+                    # deadline lands first, the partial hands off through
+                    # its consumer's lineage rebuild instead.
+                    time.sleep(min(0.01, max(0.001, until - time.time())))
+                    continue
                 break
             # Spread evacuations over the least-loaded staying members;
             # the transfers ride the ordinary receiver-driven broadcast
@@ -2221,9 +2634,25 @@ class LocalCluster:
             # were evacuating (drain under load).
         with self._dir_lock:
             self.dead.add(node)
+            # Record the planned departure: chain consumers that must now
+            # rebuild a partial this node held classify the rebuild as a
+            # drain HANDOFF (``splices_drain``), not a failure re-splice.
+            self._drained[node] = self.membership_epoch
+            # Producing chain partials that did not finish within the
+            # deadline hand off through their consumers instead: the fold
+            # resumes from the consumer's own watermark with a lineage
+            # rebuild (byte-identical ``op(a, b)`` association), so they
+            # are not *lost* -- exclude them from the orphan proof.  A
+            # partial whose lineage cannot rebuild surfaces ObjectLost
+            # through its own chain, not through the drain.
+            producing_ids = {
+                oid for oid in self.directory.objects_at(node)
+                if self.directory.producing_at(oid, node)
+            }
             old_store = self.stores.replace(node)
             self.stores.remove(node)  # departs membership (unlike fail_node)
             orphaned = self.directory.fail_node(node)  # also clears draining
+            orphaned = [o for o in orphaned if o not in producing_ids]
             self.draining.discard(node)
             self._stats.drains += 1
             self._stats.evacuated_objects += len(evacuated)

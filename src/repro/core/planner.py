@@ -311,6 +311,49 @@ def broadcast_policy(
     return BroadcastPolicy("binomial", max(2, math.ceil(math.log2(n + 1))))
 
 
+# ---------------------------------------------------------------------------
+# Elastic member-set re-splice policy (shared by both planes)
+# ---------------------------------------------------------------------------
+
+# splice_mode outcomes: how a mid-chain member delta (a joiner's
+# contribution arriving under a later membership epoch) is absorbed.
+SPLICE_TAIL = "tail"      # splice into the chain tail (ChainState.splice_source)
+SPLICE_SIDE = "side"      # fold as a late side-contribution at finalization
+SPLICE_REJECT = "reject"  # too late: the fold frontier already passed
+
+
+def splice_mode(
+    chain_active: bool,
+    fold_frontier: int,
+    size: float,
+) -> str:
+    """Where a joiner's contribution can still enter an in-flight reduce.
+
+    The chain contract is epoch-versioned: contributions that were in the
+    member set at chain start ride ``ChainState.on_ready``; a later epoch's
+    contribution must be *spliced*.  While the arrival-order chain is still
+    consuming sources (``chain_active``), the joiner simply becomes the new
+    tail -- its watermark can catch the fold frontier because the tail hop
+    has not been issued yet (``SPLICE_TAIL``).  Once the chain closed but
+    the receiver's final fold has not yet written its first window
+    (``fold_frontier == 0``), the contribution folds as an extra operand of
+    the finalization fold -- associativity/commutativity of the elementwise
+    op makes the result exact (``SPLICE_SIDE``).  After the frontier moved
+    (``fold_frontier > 0``) bytes below the output watermark are immutable
+    and may already have been copied by chasing consumers, so the splice is
+    rejected (``SPLICE_REJECT``) -- the caller folds the late contribution
+    outside the collective or re-runs it.
+
+    Shared by ``LocalCluster.splice_contribution`` and the simulator's
+    ``Hoplite`` so both planes make the identical tail/side/reject call.
+    """
+    if chain_active:
+        return SPLICE_TAIL
+    if fold_frontier <= 0:
+        return SPLICE_SIDE
+    return SPLICE_REJECT
+
+
 def bounded_time_participants(n: int, min_participants=None) -> int:
     """Participation quorum k for a bounded-time allreduce over ``n``
     contributions.  Default is k = n - 1 -- tolerate exactly one

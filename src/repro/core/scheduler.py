@@ -110,9 +110,19 @@ class ChainState:
     result in an additional transfer to node D").
     """
 
-    def __init__(self, receiver_node: int, tag: str = "red"):
+    def __init__(self, receiver_node: int, tag: str = "red", epoch: int = 0):
         self.receiver_node = receiver_node
         self.tag = tag
+        # Membership epoch snapshot at chain creation.  Member deltas that
+        # land mid-chain (add_node / drain_node) bump the cluster epoch and
+        # re-splice the chain through ``splice_source`` / the drain handoff,
+        # recorded here so the trace can attribute every divergence from
+        # the start-time member set to an epoch transition.
+        self.epoch = epoch
+        self.splices_join = 0
+        self.splices_drain = 0
+        # (epoch, kind, object_id) per member-change splice, in order.
+        self.member_events: List[Tuple[int, str, str]] = []
         self._tail: Optional[Tuple[int, str]] = None  # (node, object_id)
         self._local: List[str] = []  # receiver-local ready objects
         self._hops = 0
@@ -147,6 +157,40 @@ class ChainState:
         self.lineage[out_object] = (src_object, object_id)
         self._tail = (node, out_object)
         return hop
+
+    def splice_source(self, node: int, object_id: str, epoch: int) -> Optional[Hop]:
+        """Member-change tail splice: admit a contribution that was NOT in
+        the chain's start-time member set (a joiner that arrived under a
+        later membership ``epoch``).  Mechanically identical to
+        :meth:`on_ready` -- the joiner becomes the new chain tail, its fold
+        recorded in ``lineage`` with the same ``op(a, b)`` association any
+        original member would get -- but counted and logged as a join
+        splice so the trace can equate splice instants with the
+        ``splices_join`` stat."""
+        self.splices_join += 1
+        self.member_events.append((epoch, "join", object_id))
+        self.epoch = epoch
+        return self.on_ready(node, object_id)
+
+    def splice_side(self, object_id: str, epoch: int) -> None:
+        """Member-change side splice: the contribution arrived after the
+        chain closed and folds as an extra operand of the receiver's
+        finalization fold instead -- exact by associativity/commutativity
+        of the elementwise op.  Bookkeeping only; the receiver streams the
+        contribution itself."""
+        self.splices_join += 1
+        self.member_events.append((epoch, "join", object_id))
+        self.epoch = epoch
+
+    def note_drain_handoff(self, object_id: str, epoch: int) -> None:
+        """Member-change drain splice: the holder of ``object_id`` (a chain
+        partial, possibly still producing) left via ``drain_node`` and its
+        chain position was handed to a successor -- the fold resumed from
+        the evacuated copy or the lineage re-fold, byte-identically.
+        Bookkeeping only; the consumer performs the actual re-splice."""
+        self.splices_drain += 1
+        self.member_events.append((epoch, "drain", object_id))
+        self.epoch = epoch
 
     def final_hop(self, final_object: str) -> Optional[Hop]:
         """All sources ready: stream the tail into the receiver (which then

@@ -45,12 +45,21 @@ from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.planner import (
     LinkSpec,
     EC2_LINK,
+    SPLICE_REJECT,
+    SPLICE_SIDE,
     allreduce_policy,
     broadcast_policy,
+    splice_mode,
     use_two_dimensional,
 )
 from repro.core.scheduler import ChainState, Hop, partition_groups
-from repro.core.trace import CAT_CHAIN, CAT_MEMBERSHIP, CAT_STREAM, FlightRecorder
+from repro.core.trace import (
+    CAT_CHAIN,
+    CAT_MEMBERSHIP,
+    CAT_STREAM,
+    RESPLICE_MEMBER_CHANGE,
+    FlightRecorder,
+)
 
 # ---------------------------------------------------------------------------
 # Event kernel (miniature SimPy)
@@ -260,6 +269,10 @@ class SimCluster:
         self.nodes = {i: Node(self.sim, i) for i in range(spec.num_nodes)}
         self.directory = ObjectDirectory()
         self.bytes_on_wire = 0
+        # Membership epoch (mirrors LocalCluster.membership_epoch): bumped
+        # on every membership delta so in-flight chains can stamp their
+        # member-change splices with the epoch that caused them.
+        self.membership_epoch = 0
         # Fault-injection plane (core/faults): the SAME FaultPlan schema
         # the threaded cluster consumes, applied here per chunk -- link
         # jitter adds propagation latency, bandwidth degradation and
@@ -406,6 +419,7 @@ class SimCluster:
         return buf
 
     def fail_node(self, node: int) -> List[str]:
+        self.membership_epoch += 1
         self.nodes[node].failed = True
         self.nodes[node].buffers.clear()
         return self.directory.fail_node(node)
@@ -420,6 +434,7 @@ class SimCluster:
         if node is None:
             node = max(self.nodes, default=-1) + 1
         node = int(node)
+        self.membership_epoch += 1
         existing = self.nodes.get(node)
         if existing is not None:
             existing.failed = False
@@ -427,7 +442,10 @@ class SimCluster:
             self.nodes[node] = Node(self.sim, node)
         self.directory.set_draining(node, False)
         if self.trace.enabled:
-            self.trace.instant(CAT_MEMBERSHIP, "joined", node, "")
+            self.trace.instant(
+                CAT_MEMBERSHIP, "joined", node, "",
+                epoch=self.membership_epoch,
+            )
         return node
 
     def drain_node(self, node: int, deadline: float = 0.0) -> List[str]:
@@ -436,9 +454,13 @@ class SimCluster:
         threaded plane's job): the node is soft-avoided by
         ``select_source`` from now on, then leaves -- the returned list
         is whatever the directory drop orphaned."""
+        self.membership_epoch += 1
         self.directory.set_draining(node, True)
         if self.trace.enabled:
-            self.trace.instant(CAT_MEMBERSHIP, "drain-start", node, "")
+            self.trace.instant(
+                CAT_MEMBERSHIP, "drain-start", node, "",
+                epoch=self.membership_epoch,
+            )
         n = self.nodes.get(node)
         if n is not None:
             n.failed = True
@@ -466,6 +488,38 @@ class Hoplite:
         self.sim = cluster.sim
         self.spec = cluster.spec
         self.directory = cluster.directory
+        # Member-change splice counters (mirror DataPlaneStats on the
+        # threaded plane): every counted splice also emits a
+        # ``splice-join`` trace instant, so instants == stats holds here
+        # too.
+        self.splices_join = 0
+        self.splices_drain = 0
+        self._active_chains: Dict[str, dict] = {}
+
+    # -- elastic membership ---------------------------------------------------
+
+    def splice_contribution(self, target_id: str, object_id: str, src_node: int) -> bool:
+        """Admit a joiner's contribution into the in-flight reduce chain
+        of ``target_id`` -- the simulator's half of the epoch-versioned
+        chain contract, deciding through the SAME ``planner.splice_mode``
+        the threaded plane uses.  Tail splices enter the chain's arrival
+        feed (the joiner becomes the new tail); side splices fold as an
+        extra operand of the receiver's finalization; once the fold
+        frontier moved the splice is rejected and the caller should fall
+        back to a follow-up reduce.  Returns True when admitted."""
+        h = self._active_chains.get(target_id)
+        if h is None:
+            return False
+        mode = splice_mode(h["chain_active"], h["fold_frontier"], 0.0)
+        if mode == SPLICE_REJECT:
+            return False
+        if mode == SPLICE_SIDE:
+            h["side"].append((object_id, src_node))
+        else:
+            h["spliced"].add(object_id)
+            h["expected"][0] += 1
+            h["push"](object_id, src_node)
+        return True
 
     # -- Put -----------------------------------------------------------------
 
@@ -610,7 +664,9 @@ class Hoplite:
         )
 
     def _arrival_feed(self, source_ids: Dict[str, int], ready_events):
-        """Yields (oid, node) in readiness order via directory subscription."""
+        """(next_arrival, push): (oid, node) in readiness order via
+        directory subscription; ``push`` injects an extra arrival (a
+        member-change tail splice) into the same feed."""
         sim = self.sim
         queue: List[Tuple[str, int]] = []
         waiter: List[Optional[Event]] = [None]
@@ -644,7 +700,7 @@ class Hoplite:
 
             return sim.process(proc())
 
-        return next_arrival
+        return next_arrival, on_pub
 
     def _reduce_chain(
         self, node, target_id, source_ids, size, ready_events, _top=True,
@@ -663,20 +719,49 @@ class Hoplite:
             if result is None:
                 result = self.c.new_buffer(node, target_id, size)
             self.directory.publish_partial(target_id, node, size, producing=True)
-            chain = ChainState(node, tag=target_id)
-            next_arrival = self._arrival_feed(source_ids, ready_events)
+            chain = ChainState(
+                node, tag=target_id, epoch=self.c.membership_epoch
+            )
+            next_arrival, push = self._arrival_feed(source_ids, ready_events)
+            # Elastic-chain handle: splice_contribution consults it to
+            # decide tail vs side vs reject (shared planner.splice_mode).
+            handle = {
+                "chain": chain,
+                "push": push,
+                "expected": [len(source_ids)],
+                "chain_active": True,
+                "fold_frontier": 0.0,
+                "spliced": set(),
+                "side": [],
+            }
+            self._active_chains[target_id] = handle
             hop_events: List[Event] = []
             arrived: List[SimBuffer] = []
-            for _ in range(len(source_ids)):
+            consumed = 0
+            while consumed < handle["expected"][0]:
                 oid, src_node = yield next_arrival()
+                consumed += 1
                 src_node_buf = self.c.nodes[src_node].buffers.get(oid)
                 if src_node_buf is None:
                     src_node_buf = self.c.new_buffer(src_node, oid, size, frozenset([oid]))
                     src_node_buf.fill()
                 arrived.append(src_node_buf)
-                hop = chain.on_ready(src_node, oid)
+                if oid in handle["spliced"]:
+                    hop = chain.splice_source(
+                        src_node, oid, self.c.membership_epoch
+                    )
+                    self.splices_join += 1
+                    if self.c.trace.enabled:
+                        self.c.trace.instant(
+                            CAT_CHAIN, "splice-join", node, target_id,
+                            reason=RESPLICE_MEMBER_CHANGE, source=oid,
+                            mode="tail", epoch=chain.epoch,
+                        )
+                else:
+                    hop = chain.on_ready(src_node, oid)
                 if hop is not None:
                     hop_events.append(self._exec_hop(hop, size))
+            handle["chain_active"] = False
             final = chain.final_hop(target_id)
             if final is not None:
                 src_buf = self.c.nodes[final.src_node].buffers[final.src_object]
@@ -688,6 +773,36 @@ class Hoplite:
                     ),
                 )
                 result.merge_content(src_buf.content)
+            # Freeze the fold frontier: from here splice_contribution
+            # rejects, and the side list is final (the sim is
+            # single-threaded, so no event can append after this point).
+            handle["fold_frontier"] = 1.0
+            for s_oid, s_node in handle["side"]:
+                chain.splice_side(s_oid, self.c.membership_epoch)
+                self.splices_join += 1
+                if self.c.trace.enabled:
+                    self.c.trace.instant(
+                        CAT_CHAIN, "splice-join", node, target_id,
+                        reason=RESPLICE_MEMBER_CHANGE, source=s_oid,
+                        mode="side", epoch=chain.epoch,
+                    )
+                sbuf = self.c.nodes[s_node].buffers.get(s_oid)
+                if sbuf is None:
+                    sbuf = self.c.new_buffer(s_node, s_oid, size, frozenset([s_oid]))
+                    sbuf.fill()
+                if s_node != node:
+                    tmp = self.c.new_buffer(node, s_oid, size, sbuf.content)
+                    yield self.sim.timeout(self.spec.link.latency)
+                    yield self.c.net_stream(
+                        s_node, node, sbuf, tmp, reduce_into=True
+                    )
+                else:
+                    yield sbuf.wait_bytes(sbuf.size)
+                    yield self.c.nodes[node].mem.serve(
+                        size / self.spec.reduce_bandwidth
+                    )
+                result.merge_content(sbuf.content)
+                arrived.append(sbuf)
             # Fold receiver-local source objects (streaming adds), gated on
             # each one's own completion -- a local source may itself be a
             # group partial still being produced (fused 2-D).
@@ -705,6 +820,8 @@ class Hoplite:
                 f"reduce dropped contributions: {all_content - result.content}"
             )
             self.directory.publish_complete(target_id, node, size)
+            if self._active_chains.get(target_id) is handle:
+                del self._active_chains[target_id]
             return result
 
         return self.sim.process(proc())

@@ -64,6 +64,11 @@ class DataPlaneStats:
         that node (asserted <= ceil(n/sqrt(n)) per node in the 2-D plan)
       * ``resplices``     -- mid-chain failure recoveries that resumed a
         reduce from the predecessor watermark instead of restarting
+      * ``splices_join``  -- member-change re-splices that admitted a
+        joiner's contribution into an in-flight reduce chain
+      * ``splices_drain`` -- member-change re-splices that handed a
+        draining node's chain position (its producing partial) to a
+        successor instead of dropping the contribution
 
     And critical-path attribution (fed by ``core/trace.StageClock``):
 
@@ -83,6 +88,8 @@ class DataPlaneStats:
         "dir_wakeups",
         "windows",
         "resplices",
+        "splices_join",
+        "splices_drain",
         "stall_replans",
         "straggler_cuts",
         "dropped_contributions",
@@ -111,6 +118,8 @@ class DataPlaneStats:
         self.dir_wakeups = 0
         self.windows = 0
         self.resplices = 0
+        self.splices_join = 0
+        self.splices_drain = 0
         self.stall_replans = 0
         self.straggler_cuts = 0
         self.dropped_contributions = 0

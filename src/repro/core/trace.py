@@ -92,6 +92,12 @@ CATEGORIES = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE,
 # pid lane for serving-plane events (data-plane nodes are >= 0)
 NODE_ROUTER = -1
 
+# Re-splice reason carried by member-change splice instants
+# (``splice-join`` / ``splice-drain`` under CAT_CHAIN): distinguishes an
+# elastic member-set change from the failure-driven ``resplice`` events,
+# whose count must keep matching ``stats["resplices"]`` exactly.
+RESPLICE_MEMBER_CHANGE = "member-change"
+
 
 class FlightRecorder:
     """Bounded in-memory recorder of structured data-plane events.

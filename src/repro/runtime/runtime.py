@@ -150,6 +150,24 @@ class Runtime:
         from membership.  Returns the evacuated object ids."""
         return self.cluster.drain_node(node, deadline=deadline)
 
+    @property
+    def membership_epoch(self) -> int:
+        """Monotonic member-set version: one transition per join / drain /
+        kill / restart.  In-flight reduce chains carry the epoch they last
+        spliced under (see ``splice_contribution``)."""
+        return self.cluster.membership_epoch
+
+    def splice_contribution(self, target_id: str, source) -> bool:
+        """Offer a post-start contribution (a joiner's gradient) to the
+        in-flight reduce/allreduce chain producing ``target_id``.
+        ``source`` is an ObjectRef or a raw object id.  Returns True iff
+        the contribution will be folded into the result (tail splice while
+        the chain is consuming, late side-fold before finalization);
+        False once the fold frontier has moved -- re-run or fold outside
+        the collective then."""
+        source_id = source.id if isinstance(source, ObjectRef) else str(source)
+        return self.cluster.splice_contribution(str(target_id), source_id)
+
     def placement_of(self, ref: ObjectRef) -> Optional[int]:
         """The node the ref's producing task ran on (or None for an
         unplaced/errored ref)."""
@@ -347,25 +365,48 @@ class Runtime:
         node: Optional[int] = None,
         timeout: float = 60.0,
     ) -> ObjectRef:
-        """Annotated reduce: Hoplite chains the sources dynamically."""
+        """Annotated reduce: Hoplite chains the sources dynamically.
+
+        The chain is a *streaming barrier*: it starts the moment the
+        call is placed and consumes refs in completion order, so late
+        tasks feed the chain tail as they finish -- and the chain stays
+        open while any source is outstanding, which is exactly the
+        window ``splice_contribution`` needs to admit a post-start
+        joiner (waiting for every ref up front would close the elastic
+        splice window before it opened).  A source ref that errors
+        fails the reduce promptly through its done-callback instead of
+        riding out the chain timeout."""
         node = self._pick_node(node)
         out = ObjectRef(self)
         out.node = node
         with self._lock:
             self._refs[out.id] = out
 
+        def finish(err: Optional[BaseException] = None):
+            with self._lock:
+                if out.ready.is_set():
+                    return
+                if err is not None and out.error is None:
+                    out.error = err
+                out.ready.set()
+            self._fire_callbacks(out)
+
+        def fail_fast(r):
+            if r.error is not None:
+                finish(TaskError(str(r.error)))
+
+        for r in refs:
+            r.add_done_callback(fail_fast)
+
         def run():
             try:
-                for r in refs:
-                    r.ready.wait(timeout=timeout)
-                    if r.error is not None:
-                        raise TaskError(str(r.error))
-                self.cluster.reduce(node, out.id, [r.id for r in refs], op, timeout=timeout)
+                self.cluster.reduce(
+                    node, out.id, [r.id for r in refs], op, timeout=timeout
+                )
             except BaseException as e:  # noqa: BLE001
-                out.error = e
-            finally:
-                out.ready.set()
-                self._fire_callbacks(out)
+                finish(e)
+            else:
+                finish()
 
         threading.Thread(target=run, daemon=True).start()
         return out

@@ -244,3 +244,125 @@ def test_live_replay_with_churn_identical_logs():
     # The join actually landed (node 4 is a member) on both runs.
     for c in (ca, cb):
         assert 4 in c.stores
+
+
+# ---------------------------------------------------------------------------
+# mid-collective churn (ISSUE 9): joins/drains land DURING the fold
+# ---------------------------------------------------------------------------
+
+
+def test_mid_collective_churn_storm():
+    """A seeded churn storm whose join and drain land *during* concurrent
+    reduce + streaming allreduce (not between collectives):
+
+      * nothing hangs;
+      * the reduce is exact;
+      * the allreduce is exact over the SPLICED member set -- the joiner's
+        contribution (Put from the storm's ``on_join`` hook and offered
+        via ``splice_contribution``) folds in mid-chain;
+      * zero contribution loss on the drain: the drained member's
+        contribution is in the fold and ``AllreduceResult.dropped`` is
+        empty -- a planned departure is never a cut;
+      * the splice log is consistent: trace ``splice-join``/``splice-drain``
+        instants == ``splices_join + splices_drain`` stats, and the
+        failure invariant ``resplice`` instants == ``resplices`` holds;
+      * the injector replay contract holds (``log`` == timeline) -- the
+        splice hooks ride *outside* the seeded schedule.
+    """
+    ft = FaultToleranceConfig(stall_timeout=1.0, watermark_recheck_s=0.25,
+                              get_timeout=30.0, reduce_timeout=90.0)
+    plan = FaultPlan.storm(SEED, N, duration=1.0, kills=0, jitter_s=0.0,
+                           join_nodes=(N,), drain_nodes=(5,),
+                           drain_deadline=30.0)
+    assert len(plan.joins) == 1 and len(plan.drains) == 1
+    c = LocalCluster(N, chunk_size=8192, pace=0.002, fault_tolerance=ft,
+                     trace=True)
+    rng = np.random.RandomState(SEED)
+    avals = [rng.rand(ELEMS) for _ in range(N + 1)]
+    rvals = [rng.rand(ELEMS) for _ in range(4)]
+    for i in range(4):
+        c.put(i, f"r{i}", rvals[i])
+    # Stagger the allreduce sources so the fused chain is still folding
+    # when the storm's drain (~0.24 s) and join (~0.54 s) land; the
+    # to-be-drained node contributes FIRST so the drain races the fold,
+    # not the Put.
+    drained = 5
+    c.put(drained, f"a{drained}", avals[drained])
+    timers = [
+        threading.Timer(0.1 * i, lambda i=i: c.put(i, f"a{i}", avals[i]))
+        for i in range(N) if i != drained
+    ]
+    for t in timers:
+        t.daemon = True
+        t.start()
+
+    spliced: dict = {}
+    inj = FaultInjector(plan)
+
+    def on_join(node):
+        c.put(node, f"a{node}", avals[node])
+        spliced["accepted"] = c.splice_contribution("asum", f"a{node}")
+
+    inj.on_join = on_join
+    inj.start(c)
+
+    results: dict = {}
+    errors: dict = {}
+
+    def record(name, fn):
+        try:
+            results[name] = fn()
+        except BaseException as e:  # noqa: BLE001 -- asserted below
+            errors[name] = e
+
+    threads = [
+        threading.Thread(
+            target=record,
+            args=("reduce", lambda: c.reduce(
+                0, "rsum", [f"r{i}" for i in range(4)], SUM, timeout=60.0)),
+            daemon=True),
+        threading.Thread(
+            target=record,
+            args=("allreduce", lambda: c.allreduce(
+                list(range(N)), "asum", [f"a{i}" for i in range(N)], SUM,
+                timeout=90.0)),
+            daemon=True),
+    ]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    wall = time.time() - t0
+    assert not any(t.is_alive() for t in threads), \
+        f"mid-collective churn hung after {wall:.1f}s"
+    last = max(at for at, _k, _n in inj.timeline())
+    time.sleep(max(0.0, last - inj.elapsed()) + 0.3)
+    inj.stop()
+    for t in timers:
+        t.cancel()
+
+    assert not errors, f"collectives failed under churn: {errors!r}"
+    np.testing.assert_allclose(c.get(0, "rsum"), sum(rvals), rtol=1e-10)
+
+    # The joiner spliced in mid-chain (seeded join at ~0.54 s, chain
+    # folding until ~0.8 s) and the fold is exact over ALL N+1
+    # contributions -- the drained member's included, lossless.
+    assert spliced.get("accepted") is True, "mid-chain splice was rejected"
+    res = results["allreduce"]
+    assert res.dropped == (), "a drain (or join) must never be dropped"
+    np.testing.assert_allclose(c.get(0, "asum"), sum(avals), rtol=1e-10)
+
+    # Splice-log consistency and the failure-re-splice invariant.
+    stats = c.stats
+    splices = [e for e in c.trace.events()
+               if e[4] in ("splice-join", "splice-drain")]
+    resplices = [e for e in c.trace.events() if e[4] == "resplice"]
+    assert len(splices) == stats["splices_join"] + stats["splices_drain"]
+    assert stats["splices_join"] >= 1
+    assert len(resplices) == stats["resplices"]
+    assert stats["straggler_cuts"] == 0 and stats["dropped_contributions"] == 0
+
+    # Replay: the applied churn sequence is exactly the seeded timeline.
+    assert inj.log == [(round(at, 9), k, n) for at, k, n in inj.timeline()]
+    assert N in c.stores and drained not in c.stores

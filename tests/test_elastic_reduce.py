@@ -1,0 +1,424 @@
+"""Elastic reduce: epoch-versioned member-set re-splice for in-flight
+chains (ISSUE 9).
+
+The member set of a reduce/allreduce is first-class and elastic: every
+chain carries the membership epoch it last spliced under, and the three
+member deltas (kill, drain, join) funnel through one re-splice
+mechanism:
+
+  * a **join** mid-reduce splices the joiner's contribution into the
+    chain tail while the chain is consuming (``SPLICE_TAIL``), or folds
+    it as a late side-contribution before finalization freezes its input
+    set (``SPLICE_SIDE``); afterwards it is rejected -- the prefix bytes
+    are immutable;
+  * a **drain** evacuates the drainer's producing chain partial at its
+    current watermark and hands its chain position to a successor; the
+    fold resumes byte-identically (same ``op(a, b)`` association) via
+    the lineage rebuild, counted in ``splices_drain`` -- never in
+    ``resplices`` (the failure counter) and never in
+    ``AllreduceResult.dropped``;
+  * a **kill** keeps its pre-existing contract: failure re-splice,
+    ``resplices`` == ``resplice`` trace instants exactly.
+
+Both planes (threaded LocalCluster and the simulator) decide through the
+same ``planner.splice_mode``.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import SUM
+from repro.core.faults import FaultInjector, FaultPlan, LinkFault
+from repro.core.local import AllreduceResult, LocalCluster
+from repro.core.planner import (
+    SPLICE_REJECT,
+    SPLICE_SIDE,
+    SPLICE_TAIL,
+    splice_mode,
+)
+from repro.core.simulation import ClusterSpec, Hoplite, RayStyle, SimCluster
+
+KB = 1 << 10
+MB = 1 << 20
+ELEMS = 32_768  # 256 KB of float64 -- past inline, so bytes stream
+
+
+def _splice_instants(c):
+    return [e for e in c.trace.events()
+            if e[4] in ("splice-join", "splice-drain")]
+
+
+def _resplice_instants(c):
+    return [e for e in c.trace.events() if e[4] == "resplice"]
+
+
+# ---------------------------------------------------------------------------
+# the shared contract
+# ---------------------------------------------------------------------------
+
+
+def test_splice_mode_contract():
+    """Tail while the chain consumes; side after it closed but before the
+    finalization fold froze its inputs; reject once the frontier moved.
+    Shared by both planes, so one table pins the contract."""
+    assert splice_mode(True, 0, 1 * MB) == SPLICE_TAIL
+    assert splice_mode(True, 0, 0.0) == SPLICE_TAIL
+    assert splice_mode(False, 0, 1 * MB) == SPLICE_SIDE
+    assert splice_mode(False, 1, 1 * MB) == SPLICE_REJECT
+    assert splice_mode(False, 123, 0.0) == SPLICE_REJECT
+
+
+def test_membership_epoch_tracks_member_deltas():
+    """Every member delta -- join, drain, kill, restart -- bumps the
+    cluster-wide membership epoch (both planes)."""
+    c = LocalCluster(3, chunk_size=32 * KB)
+    seen = [c.membership_epoch]
+
+    def bumped():
+        seen.append(c.membership_epoch)
+        assert seen[-1] > seen[-2], "member delta did not bump the epoch"
+
+    n = c.add_node()
+    bumped()
+    c.put(0, "x", np.ones(ELEMS))
+    c.drain_node(n, deadline=2.0)
+    bumped()
+    c.fail_node(2)
+    bumped()
+    c.restart_node(2)
+    bumped()
+
+    s = SimCluster(ClusterSpec(num_nodes=3))
+    e0 = s.membership_epoch
+    j = s.add_node()
+    assert s.membership_epoch > e0
+    e1 = s.membership_epoch
+    s.drain_node(j)
+    assert s.membership_epoch > e1
+
+
+# ---------------------------------------------------------------------------
+# join: tail splice into a live chain
+# ---------------------------------------------------------------------------
+
+
+def test_join_tail_splice_mid_reduce():
+    """A node joining mid-reduce gets its contribution spliced into the
+    chain tail: the result is the exact sum over the NEW member set, the
+    splice is counted in ``splices_join``, emits exactly one
+    ``splice-join`` instant, and never touches ``resplices``."""
+    c = LocalCluster(3, chunk_size=4 * KB, pace=0.002, trace=True)
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(4)]
+    c.put(0, "g0", vals[0])
+    timers = [
+        threading.Timer(0.25, lambda: c.put(1, "g1", vals[1])),
+        threading.Timer(0.50, lambda: c.put(2, "g2", vals[2])),
+    ]
+    for t in timers:
+        t.daemon = True
+        t.start()
+
+    res, err = {}, {}
+
+    def run():
+        try:
+            res["r"] = c.reduce(0, "sum", ["g0", "g1", "g2"], SUM,
+                                timeout=30.0)
+        except BaseException as e:  # noqa: BLE001 -- asserted below
+            err["e"] = e
+
+    worker = threading.Thread(target=run, daemon=True)
+    worker.start()
+    time.sleep(0.1)  # chain is live, g1/g2 still pending
+
+    joiner = c.add_node()
+    c.put(joiner, "g3", vals[3])
+    accepted = c.splice_contribution("sum", "g3")
+    assert accepted, "mid-chain tail splice must be admitted"
+
+    worker.join(timeout=30.0)
+    assert not worker.is_alive(), "reduce hung across the splice"
+    assert "e" not in err, f"reduce failed: {err.get('e')!r}"
+    np.testing.assert_allclose(c.get(0, "sum"), sum(vals), rtol=1e-12)
+
+    st = c.stats
+    assert st["splices_join"] == 1
+    assert st["resplices"] == 0
+    assert len(_splice_instants(c)) == st["splices_join"] + st["splices_drain"]
+    assert len(_resplice_instants(c)) == st["resplices"]
+    for t in timers:
+        t.cancel()
+
+
+def test_splice_rejected_after_completion_and_without_bytes():
+    """Offers land only in the window where exactness is preservable: a
+    finished chain rejects, and a source that was never Put rejects."""
+    c = LocalCluster(3, chunk_size=32 * KB)
+    vals = [np.ones(ELEMS) * (i + 1) for i in range(3)]
+    for i in range(3):
+        c.put(i, f"g{i}", vals[i])
+    c.reduce(0, "sum", ["g0", "g1", "g2"], SUM, timeout=30.0)
+    c.put(1, "late", np.ones(ELEMS))
+    assert c.splice_contribution("sum", "late") is False
+    np.testing.assert_allclose(c.get(0, "sum"), sum(vals), rtol=1e-12)
+    # A live chain still refuses a contribution with no bytes anywhere.
+    assert c.splice_contribution("sum", "never-put") is False
+
+
+# ---------------------------------------------------------------------------
+# drain: chain-position handoff, not a failure and not a cut
+# ---------------------------------------------------------------------------
+
+
+def test_drain_hands_off_producing_chain_partial():
+    """Draining the node that is producing a chain partial mid-reduce
+    hands its position off: the drain holds for the live partial, the
+    fold resumes byte-identically, and the rebuild is counted in
+    ``splices_drain`` -- ``resplices`` (the failure invariant) stays 0."""
+    c = LocalCluster(3, chunk_size=2 * KB, pace=0.004, trace=True)
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(3)]
+    for i in range(3):
+        c.put(i, f"g{i}", vals[i])
+    # Replicate the leaves so only the producing hop partial is sole at
+    # its producer -- the drain's work-list is exactly the chain state.
+    for i in range(3):
+        c.prefetch_async((i + 1) % 3, f"g{i}").result(timeout=10)
+
+    res, err = {}, {}
+
+    def run():
+        try:
+            res["r"] = c.reduce(0, "sum", ["g0", "g1", "g2"], SUM,
+                                timeout=45.0)
+        except BaseException as e:  # noqa: BLE001 -- asserted below
+            err["e"] = e
+
+    worker = threading.Thread(target=run, daemon=True)
+    worker.start()
+    time.sleep(0.15)  # mid-chain: node 2's hop partial is producing
+    # Tight deadline: the producing partial cannot finish in time, so it
+    # hands off through its consumer's lineage rebuild -- the elastic
+    # path this test pins down (a generous deadline would instead hold
+    # the drain for completion and evacuate an ordinary COMPLETE copy).
+    c.drain_node(2, deadline=0.05)
+    worker.join(timeout=45.0)
+    assert not worker.is_alive(), "reduce hung across the drain"
+    assert "e" not in err, f"reduce failed across drain: {err.get('e')!r}"
+    np.testing.assert_allclose(c.get(0, "sum"), sum(vals), rtol=1e-12)
+
+    st = c.stats
+    assert st["splices_drain"] >= 1, "drain handoff was not classified"
+    assert st["resplices"] == 0, "a drain must never count as a re-splice"
+    assert len(_splice_instants(c)) == st["splices_join"] + st["splices_drain"]
+
+
+def test_bounded_allreduce_drain_is_not_a_cut():
+    """Bounded-time allreduce: a contribution mid-handoff from a draining
+    member is waited out against the hard deadline, while an actual
+    straggler is still cut -- ``dropped`` names only the straggler."""
+    c = LocalCluster(4, chunk_size=8 * KB, pace=0.002, trace=True)
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(5)]
+    for i in range(4):
+        c.put(i, f"a{i}", vals[i])
+    # a4 is a genuine straggler: its Put lands long after the cut.
+    late = threading.Timer(3.0, lambda: c.put(1, "a4", vals[4]))
+    late.daemon = True
+    late.start()
+    drainer = threading.Thread(
+        target=lambda: c.drain_node(3, deadline=10.0), daemon=True)
+    drainer.start()  # a3's sole copy evacuates while the barrier runs
+
+    res = c.allreduce(
+        [0, 1, 2], "asum", [f"a{i}" for i in range(5)], SUM,
+        timeout=60.0, deadline=0.4, min_participants=4,
+    )
+    drainer.join(timeout=30.0)
+    late.cancel()
+    assert res.cut is True
+    assert res.dropped == ("a4",), \
+        "only the straggler is cut; the drained member's handoff folds in"
+    assert res.mask == (True, True, True, True, False)
+    np.testing.assert_allclose(c.get(0, "asum"), sum(vals[:4]), rtol=1e-12)
+    st = c.stats
+    assert st["straggler_cuts"] == 1
+    assert st["dropped_contributions"] == 1  # a4 only, never a3
+
+
+def test_streaming_allreduce_reports_full_participation():
+    """The unbounded (streaming) allreduce returns an ``AllreduceResult``
+    too, so elastic callers can uniformly assert ``dropped == ()``."""
+    c = LocalCluster(4, chunk_size=32 * KB, pace=0.0003)
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(4)]
+    for i in range(4):
+        c.put(i, f"a{i}", vals[i])
+    res = c.allreduce([0, 1, 2, 3], "asum",
+                      [f"a{i}" for i in range(4)], SUM, timeout=30.0)
+    assert isinstance(res, AllreduceResult) and isinstance(res, str)
+    assert res == "asum"  # still usable as a plain object id
+    assert res.dropped == () and res.cut is False
+    assert res.mask == (True, True, True, True)
+    for n in range(4):
+        np.testing.assert_allclose(c.get(n, "asum"), sum(vals), rtol=1e-12)
+
+
+def test_streaming_allreduce_forgives_drained_receiver():
+    """A receiver draining mid-collective is a planned departure: the
+    collective completes with ``dropped == ()`` for the survivors instead
+    of failing on the drainer's dead inbound leg."""
+    c = LocalCluster(4, chunk_size=4 * KB, pace=0.002, trace=True)
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(4)]
+    for i in range(4):
+        c.put(i, f"a{i}", vals[i])
+
+    res, err = {}, {}
+
+    def run():
+        try:
+            res["r"] = c.allreduce(
+                [0, 1, 2, 3], "asum", [f"a{i}" for i in range(4)], SUM,
+                timeout=45.0)
+        except BaseException as e:  # noqa: BLE001 -- asserted below
+            err["e"] = e
+
+    worker = threading.Thread(target=run, daemon=True)
+    worker.start()
+    time.sleep(0.1)
+    c.drain_node(3, deadline=10.0)
+    worker.join(timeout=45.0)
+    assert not worker.is_alive(), "allreduce hung across receiver drain"
+    assert "e" not in err, f"allreduce failed: {err.get('e')!r}"
+    assert res["r"].dropped == ()
+    assert c.stats["resplices"] == len(_resplice_instants(c))
+    for n in range(3):
+        np.testing.assert_allclose(c.get(n, "asum"), sum(vals), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# the runtime surface
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_streaming_reduce_splices_joiner():
+    """``Runtime.reduce`` is a streaming barrier: the chain starts at
+    call time and consumes task refs in completion order, so the elastic
+    splice window is open while any source task is still computing -- a
+    joiner admitted through ``Runtime.splice_contribution`` folds into
+    the result."""
+    from repro.core.local import LocalCluster
+    from repro.runtime.runtime import Runtime
+
+    rt = Runtime(cluster=LocalCluster(3, chunk_size=4 * KB, pace=0.002))
+    e0 = rt.membership_epoch
+    vals = [np.full(ELEMS, float(i + 1)) for i in range(4)]
+
+    def grad(i):
+        time.sleep(0.3 * i)
+        return vals[i]
+
+    refs = [rt.remote(grad, i, node=i) for i in range(3)]
+    out = rt.reduce(refs, SUM, node=0, timeout=60.0)
+
+    time.sleep(0.15)  # grad(2) still computing: chain open, tail pending
+    joiner = rt.add_node()
+    assert rt.membership_epoch > e0
+    gref = rt.put(vals[3], node=joiner)
+    assert rt.splice_contribution(out.id, gref) is True
+
+    np.testing.assert_allclose(rt.get(out, node=0, timeout=60.0),
+                               sum(vals), rtol=1e-12)
+    st = rt.cluster.stats
+    assert st["splices_join"] == 1 and st["resplices"] == 0
+
+
+def test_runtime_reduce_fails_fast_on_source_error():
+    """A source task that errors fails the streaming reduce promptly
+    through its done-callback -- the caller does not ride out the chain
+    timeout waiting for bytes that will never arrive."""
+    from repro.runtime.runtime import Runtime, TaskError
+
+    rt = Runtime(num_nodes=2)
+
+    def boom():
+        raise RuntimeError("boom")
+
+    refs = [rt.put(np.ones(ELEMS)), rt.remote(boom)]
+    out = rt.reduce(refs, SUM, timeout=30.0)
+    t0 = time.time()
+    with pytest.raises(TaskError):
+        rt.get(out, timeout=30.0)
+    assert time.time() - t0 < 5.0, "source error rode the chain timeout"
+
+
+# ---------------------------------------------------------------------------
+# the simulator's half of the contract
+# ---------------------------------------------------------------------------
+
+
+def test_sim_join_tail_splice():
+    """Sim plane: a joiner spliced mid-chain folds into the result; the
+    splice-join instant count equals ``splices_join``; an offer after the
+    collective finished is rejected."""
+    c = SimCluster(ClusterSpec(num_nodes=4), trace=True)
+    h = Hoplite(c)
+    size = 1 * MB
+    for i in range(3):
+        h.put(i, f"g{i}", size)
+    h.reduce(3, "sum", {f"g{i}": i for i in range(3)}, size)
+
+    admitted = {}
+
+    def churn():
+        n = c.add_node()
+        h.put(n, "g-new", size)
+        admitted["ok"] = h.splice_contribution("sum", "g-new", n)
+
+    c.sim.schedule(0.0005, churn)
+    c.sim.run()
+    assert admitted["ok"] is True
+    assert c.nodes[3].buffers["sum"].content == frozenset(
+        ["g0", "g1", "g2", "g-new"])
+    instants = [e for e in c.trace.events() if e[4] == "splice-join"]
+    assert h.splices_join == len(instants) == 1
+    assert h.splice_contribution("sum", "g-too-late", 0) is False
+
+
+def test_sim_baseline_noise_is_apples_to_apples():
+    """Per-link noise from a FaultPlan lands on BOTH simulated planes --
+    the RayStyle baseline slows down under the same injected jitter the
+    Hoplite arm sees, so noisy comparisons are apples-to-apples."""
+    size = 1 * MB
+    n = 4
+    plan = FaultPlan(seed=7, link_faults=[LinkFault(jitter_s=0.002)])
+
+    def arm(plane, noisy):
+        spec = ClusterSpec(num_nodes=n)
+        c = SimCluster(spec, faults=FaultInjector(plan) if noisy else None)
+        api = Hoplite(c) if plane == "hoplite" else RayStyle(c)
+        for i in range(n):
+            api.put(i, f"g{i}", size)
+        c.sim.run()
+        t0 = c.sim.now
+        oids = {f"g{i}": i for i in range(n)}
+        if plane == "hoplite":
+            api.allreduce(list(range(n)), oids, "sum", size)
+        else:
+            red = api.reduce(0, "sum", oids, size)
+            red.add_waiter(lambda _e: [
+                api.get(m, "sum", to_executor=False) for m in range(1, n)])
+        c.sim.run()
+        return c.sim.now - t0
+
+    for plane in ("hoplite", "ray"):
+        clean, noisy = arm(plane, False), arm(plane, True)
+        assert noisy > clean, (
+            f"{plane}: injected link noise did not land "
+            f"(clean={clean:.6f}, noisy={noisy:.6f})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(pytest.main([__file__, "-v"]))
