@@ -766,11 +766,14 @@ def provenance():
     import platform
     import subprocess
 
+    from repro.core.comm import resolve_backend_name
+
     info = {
         "schema_version": "bench_core/v2",
         "python": platform.python_version(),
         "cpu_count": os.cpu_count(),
         "platform": platform.platform(),
+        "comm_backend": resolve_backend_name(),
     }
     try:
         info["git_sha"] = (

@@ -1,0 +1,24 @@
+"""Pluggable comm transports for the threaded data plane.
+
+See :mod:`repro.core.comm.core` for the interface contract,
+:mod:`repro.core.comm.inproc` for the default direct-buffer backend and
+:mod:`repro.core.comm.socket` for the localhost asyncio-socket backend.
+"""
+
+from repro.core.comm.core import (  # noqa: F401
+    ChunkStream,
+    CommBackend,
+    CommClosedError,
+    DEFAULT_BACKEND,
+    ENV_VAR,
+    FaultableStream,
+    RemoteBufferFailed,
+    backoff_delay,
+    create_backend,
+    register_backend,
+    resolve_backend_name,
+)
+
+# Importing the implementation modules registers their backends.
+from repro.core.comm import inproc as _inproc  # noqa: F401,E402
+from repro.core.comm import socket as _socket  # noqa: F401,E402

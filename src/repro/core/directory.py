@@ -27,6 +27,7 @@ discrete-event simulator and the threaded in-process cluster.
 from __future__ import annotations
 
 import collections
+import zlib
 from typing import Callable, Dict, List, Optional
 
 from repro.core.api import (
@@ -99,7 +100,16 @@ class ObjectDirectory:
     # -- internal ----------------------------------------------------------
 
     def _shard(self, object_id: str) -> _Shard:
-        return self.shards[hash(object_id) % self.num_shards]
+        return self.shards[self.shard_index(object_id)]
+
+    def shard_index(self, object_id: str) -> int:
+        """Stable shard routing.  The builtin ``hash`` is
+        PYTHONHASHSEED-randomized, so it diverges across processes --
+        transport peers and restarted directories must agree on the
+        id -> shard mapping (``fail_primary`` carries subscriber tables
+        across shards positionally, and a multi-process plane routes
+        directory RPCs by shard).  crc32 is deterministic everywhere."""
+        return zlib.crc32(object_id.encode("utf-8")) % self.num_shards
 
     def _notify(self, shard: _Shard, object_id: str) -> None:
         for cb in list(shard.subscribers.get(object_id, ())):

@@ -90,6 +90,15 @@ class FaultToleranceConfig:
     stalls are detected a whole recheck late.  The ``*_timeout`` fields
     are the default deadlines of ``get``/``reduce``/``allreduce``/
     ``join`` when the caller passes none.
+
+    Comm-transport knobs (``core/comm``): a dropped connection retries
+    up to ``connect_retries`` times with capped exponential backoff
+    (``connect_backoff_base_s`` doubling up to ``connect_backoff_cap_s``,
+    jittered deterministically via the splitmix hash) before the stream
+    is treated as stalled and re-planned.  Backends with real endpoints
+    ping peers every ``heartbeat_interval_s``; a peer silent for
+    ``heartbeat_timeout`` is fed to ``fail_node`` (0 disables the
+    monitor).
     """
 
     stall_timeout: float = 10.0
@@ -97,6 +106,11 @@ class FaultToleranceConfig:
     get_timeout: float = 30.0
     reduce_timeout: float = 60.0
     join_timeout: float = 30.0
+    connect_retries: int = 5
+    connect_backoff_base_s: float = 0.05
+    connect_backoff_cap_s: float = 1.0
+    heartbeat_interval_s: float = 0.2
+    heartbeat_timeout: float = 2.0
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +187,55 @@ class DrainSpec:
     deadline: float = 10.0
 
 
+# Draw tags decoupling the comm-fault hash streams from the link-jitter
+# draws (both are pure in (seed, src, dst, k); the tag keeps a conn
+# fault from reusing a jitter draw at the same coordinates).
+_TAG_CONN_DROP = 0xC0D0
+_TAG_CONN_DELAY = 0xC0D1
+_TAG_CONN_RESET = 0xC0D2
+
+
+@dataclasses.dataclass(frozen=True)
+class ConnFault:
+    """Comm-level fault on a link, active over [start, end) of
+    plan-relative time -- consumed by the transport layer (both comm
+    backends) rather than the window pacing:
+
+      * ``drop``      -- connection attempts fail (backoff + retry);
+      * ``reset``     -- an established stream is torn down mid-flight
+                         after ``reset_after`` delivered windows (the
+                         receiver reconnects and resumes from its
+                         watermark);
+      * ``delay``     -- connection establishment gains extra latency
+                         drawn uniform in [0, ``delay_s``);
+      * ``partition`` -- like ``drop`` but matches BOTH directions of
+                         the (src, dst) pair.
+
+    ``src``/``dst`` of None match any endpoint; ``p`` applies each
+    fault probabilistically per attempt/stream via the pure splitmix
+    draw, so campaigns replay identically."""
+
+    kind: str  # "drop" | "reset" | "delay" | "partition"
+    src: Optional[int] = None
+    dst: Optional[int] = None
+    start: float = 0.0
+    end: float = math.inf
+    delay_s: float = 0.0
+    reset_after: int = 1
+    p: float = 1.0
+
+    def matches(self, src: int, dst: int) -> bool:
+        fwd = (self.src is None or self.src == src) and (
+            self.dst is None or self.dst == dst
+        )
+        if self.kind != "partition":
+            return fwd
+        rev = (self.src is None or self.src == dst) and (
+            self.dst is None or self.dst == src
+        )
+        return fwd or rev
+
+
 @dataclasses.dataclass
 class FaultPlan:
     """One seeded fault campaign, shared verbatim by both planes."""
@@ -187,6 +250,9 @@ class FaultPlan:
     drains: List[DrainSpec] = dataclasses.field(default_factory=list)
     # Fractional jitter on simulated per-node compute (compute_delay).
     compute_jitter: float = 0.2
+    # Comm-level faults (PR 10): connection drop/reset/delay/partition,
+    # consumed by the transport layer on both comm backends.
+    conn_faults: List[ConnFault] = dataclasses.field(default_factory=list)
 
     @classmethod
     def storm(
@@ -376,6 +442,44 @@ class FaultInjector:
         if bw < 1.0:
             extra += base_s * (1.0 / bw - 1.0)
         return extra
+
+    def connect_fault(self, src: int, dst: int, attempt: int) -> Tuple[bool, float]:
+        """(dropped, extra_connect_delay_s) for the ``attempt``-th
+        connection try of a dst->src stream open at plan-relative now --
+        pure in (seed, src, dst, attempt) given the active windows, so
+        replays drop/delay the same attempts.  ``drop`` and
+        ``partition`` faults refuse the attempt; ``delay`` faults add
+        seeded connect latency."""
+        t = self.elapsed()
+        dropped = False
+        delay = 0.0
+        for cf in self.plan.conn_faults:
+            if not cf.matches(src, dst) or not (cf.start <= t < cf.end):
+                continue
+            if cf.kind in ("drop", "partition"):
+                if _unit(self.plan.seed, _TAG_CONN_DROP, src, dst, attempt) < cf.p:
+                    dropped = True
+            elif cf.kind == "delay":
+                if _unit(self.plan.seed, _TAG_CONN_DELAY, src, dst, attempt) < cf.p:
+                    delay += cf.delay_s * _unit(
+                        self.plan.seed, _TAG_CONN_DELAY + 1, src, dst, attempt
+                    )
+        return dropped, delay
+
+    def reset_window(self, src: int, dst: int, stream_k: int) -> Optional[int]:
+        """Window ordinal (1-based) at which the ``stream_k``-th dst->src
+        stream is reset mid-flight, or None.  Evaluated once at stream
+        open against the plan windows active then; the receiver recovers
+        by backoff-reconnect + watermark resume."""
+        t = self.elapsed()
+        for cf in self.plan.conn_faults:
+            if cf.kind != "reset" or not cf.matches(src, dst):
+                continue
+            if not (cf.start <= t < cf.end):
+                continue
+            if _unit(self.plan.seed, _TAG_CONN_RESET, src, dst, stream_k) < cf.p:
+                return max(1, cf.reset_after)
+        return None
 
     def compute_delay(self, node: int, base_s: float, k: int = 0) -> float:
         """Simulated per-node compute time (e.g. a gradient step): the

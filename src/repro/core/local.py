@@ -72,6 +72,13 @@ from repro.core.api import (
     SMALL_OBJECT_THRESHOLD,
     SUM,
 )
+from repro.core.comm import (
+    CommClosedError,
+    FaultableStream,
+    RemoteBufferFailed,
+    backoff_delay,
+    create_backend,
+)
 from repro.core.directory import ObjectDirectory, ReplicatedDirectory
 from repro.core.faults import FaultInjector, FaultPlan, FaultToleranceConfig
 from repro.core.planner import (
@@ -89,6 +96,7 @@ from repro.core.scheduler import ChainState, partition_groups
 from repro.core.store import ChunkedBuffer, DataPlaneStats, NodeStore, StoreRegistry
 from repro.core.trace import (
     CAT_CHAIN,
+    CAT_COMM,
     CAT_FETCH,
     CAT_MEMBERSHIP,
     CAT_STREAM,
@@ -223,6 +231,8 @@ class LocalCluster:
         fault_tolerance: Optional[FaultToleranceConfig] = None,
         faults=None,  # FaultPlan or FaultInjector (noise only; call
         #               injector.start(cluster) to arm kills/restarts)
+        comm_backend: Optional[str] = None,  # "inproc" | "socket";
+        #               None -> $REPRO_COMM -> "inproc"
     ):
         # ``chunk_size=None`` autotunes per object via the Appendix-A cost
         # model (CollectiveConfig.chunks_for); an explicit value pins it.
@@ -306,6 +316,16 @@ class LocalCluster:
         self._stats_lock = threading.Lock()
         self.bytes_sent_per_node = [0] * num_nodes
         self.transfers: List[Tuple[int, int, str]] = []  # (src, dst, oid)
+        # Comm transport: every byte-moving leg (_stream_copy, the
+        # remote feeds of _stream_fold) goes through this backend.  The
+        # default "inproc" backend is today's direct-buffer plane; the
+        # "socket" backend moves real bytes over localhost endpoints.
+        # Per-link stream ordinals key the injector's deterministic
+        # connection-reset draws.
+        self._stream_seq: Dict[Tuple[int, int], int] = collections.defaultdict(int)
+        self._comm = create_backend(comm_backend)
+        self.comm_backend = self._comm.name
+        self._comm.attach(self)
 
     # -- helpers -------------------------------------------------------------
 
@@ -823,6 +843,87 @@ class LocalCluster:
             elif candidate is None and always_drop:
                 self.directory.drop_location(object_id, node)
 
+    def _open_stream_with_retry(
+        self,
+        src: int,
+        dst: int,
+        object_id: str,
+        src_buf: ChunkedBuffer,
+        pos: int,
+        reconnect: bool = False,
+    ):
+        """Open a comm stream from ``src``'s endpoint with capped
+        exponential backoff: each failed attempt (endpoint down,
+        connection refused, injected ConnFault drop/partition) sleeps
+        ``connect_backoff_base_s * 2**attempt`` capped at
+        ``connect_backoff_cap_s``, jittered deterministically via the
+        fault plane's splitmix hash, up to ``connect_retries`` retries.
+        Exhaustion raises ``SourceStalled`` so the caller's existing
+        re-plan machinery picks another copy (soft-avoiding this one)
+        and resumes from the receiver watermark.
+
+        ``reconnect=True`` marks a mid-stream recovery: counted in
+        ``stats.comm_reconnects`` with a matching ``reconnect`` trace
+        instant.  Injected mid-stream resets (``ConnFault("reset")``)
+        are armed here by wrapping the fresh stream, keyed by the
+        per-link stream ordinal so the draw sequence replays."""
+        seed = self.faults.plan.seed if self.faults is not None else 0
+        retries = max(0, self.ft.connect_retries)
+        for attempt in range(retries + 1):
+            if src in self.dead:
+                raise DeadNode(str(src))
+            if dst in self.dead:
+                raise DeadNode(str(dst))
+            dropped = False
+            if self.faults is not None:
+                dropped, delay = self.faults.connect_fault(src, dst, attempt)
+                if delay > 0.0:
+                    time.sleep(delay)
+            if not dropped:
+                try:
+                    stream = self._comm.open_stream(
+                        src, dst, object_id, src_buf, pos
+                    )
+                except CommClosedError:
+                    stream = None
+                if stream is not None:
+                    if self.faults is not None:
+                        with self._stats_lock:
+                            k = self._stream_seq[(src, dst)]
+                            self._stream_seq[(src, dst)] = k + 1
+                        reset_at = self.faults.reset_window(src, dst, k)
+                        if reset_at is not None:
+                            def _trip(src=src, dst=dst, oid=object_id):
+                                if self.trace.enabled:
+                                    self.trace.instant(
+                                        CAT_COMM, "conn-reset", dst, oid, src=src
+                                    )
+                            stream = FaultableStream(stream, reset_at, on_trip=_trip)
+                    if reconnect:
+                        self._stats.comm_reconnects += 1
+                        if self.trace.enabled:
+                            self.trace.instant(
+                                CAT_COMM, "reconnect", dst, object_id,
+                                src=src, resume_from=pos, attempts=attempt,
+                            )
+                    return stream
+            if attempt >= retries:
+                break
+            self._stats.connect_retries += 1
+            if self.trace.enabled:
+                self.trace.instant(
+                    CAT_COMM, "connect-retry", dst, object_id,
+                    src=src, attempt=attempt,
+                )
+            time.sleep(backoff_delay(
+                seed, src, dst, attempt,
+                self.ft.connect_backoff_base_s, self.ft.connect_backoff_cap_s,
+            ))
+        raise SourceStalled(
+            f"{object_id}@{src}: connect retries exhausted",
+            node=src, object_id=object_id,
+        )
+
     def _stream_copy(
         self,
         src: int,
@@ -863,6 +964,13 @@ class LocalCluster:
         source watermark classifies as ``producer-wait``, time moving
         bytes as ``streaming``.  With tracing enabled the whole leg is
         recorded as one ``stream`` span (never per window).
+
+        The bytes themselves ride the cluster's comm backend: windows
+        arrive through a ``ChunkStream`` (a zero-copy buffer view on
+        the inproc backend, reassembled socket frames on the socket
+        backend).  A mid-stream connection loss reconnects with capped
+        backoff and resumes from ``pos`` -- the frame offsets are the
+        watermark protocol, so the result is byte-identical.
         """
         pos = start
         total = src_buf.size
@@ -872,22 +980,42 @@ class LocalCluster:
         served = 0  # flushed to the shared counters once, in finally
         win_k = 0  # window ordinal (keys the injector's pure jitter draws)
         leg_t0 = self.trace.clock() if self.trace.enabled else None
+        stream = self._open_stream_with_retry(src, dst, object_id, src_buf, pos)
         try:
             while pos < total:
                 if stage is not None and src_buf.bytes_present <= pos:
                     stage.switch(STAGE_PRODUCER_WAIT)
-                avail = src_buf.wait_for_bytes(
-                    pos + 1, timeout=self.ft.watermark_recheck_s
-                )
+                limit = src_buf.chunk_size if self.pace else window_cap
+                try:
+                    window = stream.recv(
+                        pos, limit, timeout=self.ft.watermark_recheck_s
+                    )
+                except RemoteBufferFailed:
+                    if src in self.dead:
+                        raise DeadNode(str(src))
+                    raise StaleBuffer(f"{object_id}@{src}")
+                except CommClosedError:
+                    # Connection died mid-stream (socket reset, injected
+                    # ConnFault, endpoint bounce): reconnect with backoff
+                    # and RESUME from the current watermark.  Bytes below
+                    # ``pos`` are immutable and identical on every copy,
+                    # so the spliced result is byte-identical.
+                    if src in self.dead:
+                        raise DeadNode(str(src))
+                    stream.close()
+                    stream = self._open_stream_with_retry(
+                        src, dst, object_id, src_buf, pos, reconnect=True
+                    )
+                    continue
                 if src in self.dead:
                     raise DeadNode(str(src))
-                if src_buf.failed:
-                    raise StaleBuffer(f"{object_id}@{src}")
-                if avail <= pos:
+                if window is None:
                     # Timed out with no progress: re-check membership; if
                     # the source has been wedged past the stall budget and
                     # another copy exists, re-plan rather than riding our
                     # own deadline.
+                    if src_buf.failed:
+                        raise StaleBuffer(f"{object_id}@{src}")
                     if time.time() - last_advance >= self.ft.stall_timeout:
                         with self._dir_lock:
                             elsewhere = any(
@@ -907,11 +1035,9 @@ class LocalCluster:
                 last_advance = time.time()
                 if stage is not None:
                     stage.switch(STAGE_STREAMING)
+                avail = pos + window.size
                 if self.pace:
-                    avail = min(avail, pos + src_buf.chunk_size)
                     time.sleep(self.pace)
-                else:
-                    avail = min(avail, pos + window_cap)
                 if self.faults is not None:
                     # Injected link jitter / bandwidth droop / straggler
                     # slowdown: stretch this window by the plan's penalty
@@ -923,7 +1049,6 @@ class LocalCluster:
                 win_k += 1
                 if dst in self.dead:
                     raise DeadNode(str(dst))
-                window = src_buf.view(pos, avail)  # immutable below watermark
                 dst_buf.write_chunk(pos, window)
                 self._stats.windows += 1
                 served += avail - pos
@@ -936,6 +1061,7 @@ class LocalCluster:
                     with self._dir_lock:
                         self.directory.update_progress(object_id, dst, pos)
         finally:
+            stream.close()
             if served:
                 with self._stats_lock:
                     self._stats.note_bytes_served(src, served)
@@ -2168,7 +2294,18 @@ class LocalCluster:
         from its chain lineage; otherwise a live copy of the input
         elsewhere must exist.  A stalled local-only fold just waits (its
         producer is this node; there is nothing to evict).
+
+        On a relaying comm backend (socket) each remote input is staged
+        into a local relay buffer fed by its own comm stream (with the
+        same backoff-reconnect + watermark-resume recovery as
+        ``_stream_copy``); the fold then reads relay watermarks, so the
+        fold logic -- and its failure taxonomy -- is identical on both
+        backends.  A relay whose connection cannot be re-established
+        fails its buffer, surfacing here as ``StaleBuffer`` (re-splice).
         """
+        relay_close = None
+        if self._comm.relays:
+            inputs, relay_close = self._relay_fold_inputs(dst, inputs, start)
         itemsize = np.dtype(dtype).itemsize
         pos = start
         total = out.size
@@ -2269,6 +2406,8 @@ class LocalCluster:
                     with self._dir_lock:
                         self.directory.update_progress(object_id, dst, pos)
         finally:
+            if relay_close is not None:
+                relay_close()
             if reduced or served:
                 with self._stats_lock:
                     if reduced:
@@ -2308,6 +2447,83 @@ class LocalCluster:
                 ):
                     return src, oid
         return None
+
+    def _relay_fold_inputs(
+        self, dst: int, inputs, start: int
+    ) -> Tuple[list, Callable[[], None]]:
+        """Relaying backends only: replace each remote fold input with a
+        local relay :class:`ChunkedBuffer` fed by a pump thread that
+        streams [start, size) through the comm backend.  The fold's
+        watermark gating, stall detection and failure taxonomy then work
+        on the relays exactly as they did on direct remote views.
+        Returns (wrapped inputs, closer); the closer stops the pumps
+        (they also exit on their own when the stream completes)."""
+        stops: List[threading.Event] = []
+        wrapped = []
+        for buf, oid, src in inputs:
+            if src is None or src == dst:
+                wrapped.append((buf, oid, src))
+                continue
+            relay = ChunkedBuffer(buf.size, chunk_size=buf.chunk_size, stats=self._stats)
+            stop = threading.Event()
+            threading.Thread(
+                target=self._relay_pump,
+                args=(src, dst, oid, buf, relay, start, stop),
+                daemon=True,
+            ).start()
+            stops.append(stop)
+            wrapped.append((relay, oid, src))
+
+        def close():
+            for s in stops:
+                s.set()
+
+        return wrapped, close
+
+    def _relay_pump(self, src, dst, object_id, src_buf, relay, start, stop):
+        """Pump one remote fold input into its relay buffer.  Connection
+        loss reconnects with backoff and resumes from the relay
+        watermark; unrecoverable loss (source dead, retries exhausted,
+        remote buffer failed) FAILS the relay so the fold observes
+        ``StaleBuffer``/``DeadNode`` promptly instead of stalling."""
+        pos = start
+        total = relay.size
+        window_cap = max(relay.chunk_size, -(-total // PIPELINE_MIN_WINDOWS))
+        window_cap += (-window_cap) % 64
+        try:
+            stream = self._open_stream_with_retry(src, dst, object_id, src_buf, pos)
+        except (DeadNode, SourceStalled):
+            relay.fail()
+            return
+        try:
+            while pos < total and not stop.is_set():
+                try:
+                    window = stream.recv(pos, window_cap, timeout=0.05)
+                except RemoteBufferFailed:
+                    relay.fail()
+                    return
+                except CommClosedError:
+                    stream.close()
+                    if src in self.dead:
+                        relay.fail()
+                        return
+                    try:
+                        stream = self._open_stream_with_retry(
+                            src, dst, object_id, src_buf, pos, reconnect=True
+                        )
+                    except (DeadNode, SourceStalled):
+                        relay.fail()
+                        return
+                    continue
+                if src in self.dead or src_buf.failed:
+                    relay.fail()
+                    return
+                if window is None:
+                    continue
+                relay.write_chunk(pos, window)
+                pos += window.size
+        finally:
+            stream.close()
 
     def _rebuild_partial(
         self, node, object_id, lineage, dtype, shape, op, deadline,
@@ -2474,6 +2690,7 @@ class LocalCluster:
         # Wake readers gated on the dead node's watermarks (outside the
         # directory lock; buffer locks are innermost).
         old_store.fail_all_buffers()
+        self._comm.on_node_down(node)
         return orphaned
 
     def restart_node(self, node: int):
@@ -2493,6 +2710,7 @@ class LocalCluster:
         # Any transfer still reading the pre-restart store's buffers must
         # fail over (those copies are gone from the directory).
         old_store.fail_all_buffers()
+        self._comm.on_node_up(node)
 
     # -- Elastic membership --------------------------------------------------
 
@@ -2518,6 +2736,7 @@ class LocalCluster:
             if self.trace.enabled:
                 self.trace.instant(CAT_MEMBERSHIP, "joined", node, "", epoch=epoch)
             self._wake_membership_waiters()
+        self._comm.on_node_up(node)
         return node
 
     def drain_node(self, node: int, deadline: Optional[float] = None) -> List[str]:
@@ -2663,6 +2882,7 @@ class LocalCluster:
                 )
             self._wake_membership_waiters()
         old_store.fail_all_buffers()
+        self._comm.on_node_down(node)
         if orphaned:
             # Deadline expired with sole copies left: surface it loudly --
             # the zero-loss guarantee only holds within the deadline.
@@ -2677,3 +2897,9 @@ class LocalCluster:
         with self._dir_lock:
             self.directory.fail_primary()
             self._wake_membership_waiters()
+
+    def shutdown(self):
+        """Release comm-backend resources (sockets, endpoint servers,
+        heartbeat thread).  Idempotent; also runs automatically when the
+        cluster is garbage-collected."""
+        self._comm.stop()

@@ -70,6 +70,17 @@ class DataPlaneStats:
         draining node's chain position (its producing partial) to a
         successor instead of dropping the contribution
 
+    And the comm transport (``core/comm``):
+
+      * ``comm_reconnects``   -- streams that lost their connection
+        mid-flight and resumed from the receiver watermark after a
+        successful backoff-reconnect
+      * ``connect_retries``   -- individual connection attempts that
+        failed and were retried with backoff
+      * ``heartbeat_misses``  -- silent peers detected by the heartbeat
+        monitor and fed to ``fail_node`` (matches the ``heartbeat-miss``
+        trace instants exactly)
+
     And critical-path attribution (fed by ``core/trace.StageClock``):
 
       * ``stage_seconds`` -- stage name -> seconds summed across all
@@ -96,6 +107,9 @@ class DataPlaneStats:
         "joins",
         "drains",
         "evacuated_objects",
+        "comm_reconnects",
+        "connect_retries",
+        "heartbeat_misses",
         "bytes_served",
         "peak_outbound",
         "bytes_reduced",
@@ -126,6 +140,9 @@ class DataPlaneStats:
         self.joins = 0
         self.drains = 0
         self.evacuated_objects = 0
+        self.comm_reconnects = 0
+        self.connect_retries = 0
+        self.heartbeat_misses = 0
         self.bytes_served: Dict[int, int] = {}
         self.peak_outbound: Dict[int, int] = {}
         self.bytes_reduced: Dict[int, int] = {}

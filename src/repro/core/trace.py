@@ -85,9 +85,11 @@ CAT_STAGE = "stage"          # stage-attribution spans (critical path)
 CAT_SERVE = "serve"          # router / request lifecycle
 CAT_FAULT = "fault"          # injected faults (kills, restarts, slow onsets)
 CAT_MEMBERSHIP = "membership"  # elastic membership (joins, drains)
+CAT_COMM = "comm"            # transport: connects, retries, reconnects,
+#                              heartbeat misses
 
 CATEGORIES = (CAT_FETCH, CAT_STREAM, CAT_DIRECTORY, CAT_CHAIN, CAT_STAGE,
-              CAT_SERVE, CAT_FAULT, CAT_MEMBERSHIP)
+              CAT_SERVE, CAT_FAULT, CAT_MEMBERSHIP, CAT_COMM)
 
 # pid lane for serving-plane events (data-plane nodes are >= 0)
 NODE_ROUTER = -1

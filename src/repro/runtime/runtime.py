@@ -84,9 +84,13 @@ class Runtime:
         seed: int = 0,
         fault_tolerance=None,  # core.faults.FaultToleranceConfig
         faults=None,  # core.faults.FaultPlan / FaultInjector
+        comm_backend: Optional[str] = None,  # core.comm backend name
     ):
         self.cluster = cluster or LocalCluster(
-            num_nodes, fault_tolerance=fault_tolerance, faults=faults
+            num_nodes,
+            fault_tolerance=fault_tolerance,
+            faults=faults,
+            comm_backend=comm_backend,
         )
         self._executors_per_node = executors_per_node
         self._rng = np.random.RandomState(seed)

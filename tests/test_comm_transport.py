@@ -1,0 +1,287 @@
+"""Pluggable comm transport (ISSUE 10): backend selection, framing edge
+cases on both backends, backoff-reconnect + watermark resume under
+injected connection faults, sender-side slot release on receiver
+disconnect, and heartbeat-based silent-death detection on the socket
+backend."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import ObjectLost
+from repro.core.comm import (
+    CommClosedError,
+    backoff_delay,
+    resolve_backend_name,
+)
+from repro.core.faults import (
+    ConnFault,
+    FaultInjector,
+    FaultPlan,
+    FaultToleranceConfig,
+)
+from repro.core.local import LocalCluster
+from repro.core.trace import CAT_COMM
+
+BACKENDS = ("inproc", "socket")
+
+
+def _payload(n, seed=7):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, 256, size=n).astype(np.uint8)
+
+
+def _comm_instants(cluster, name):
+    return [e for e in cluster.trace.events() if e[3] == CAT_COMM and e[4] == name]
+
+
+# -- backend selection ---------------------------------------------------
+
+
+def test_backend_selection_kwarg_env_default(monkeypatch):
+    monkeypatch.delenv("REPRO_COMM", raising=False)
+    assert resolve_backend_name() == "inproc"
+    assert resolve_backend_name("socket") == "socket"
+    monkeypatch.setenv("REPRO_COMM", "socket")
+    assert resolve_backend_name() == "socket"
+    # Explicit kwarg wins over the environment.
+    assert resolve_backend_name("inproc") == "inproc"
+    with pytest.raises(ValueError):
+        resolve_backend_name("carrier-pigeon")
+    monkeypatch.setenv("REPRO_COMM", "carrier-pigeon")
+    with pytest.raises(ValueError):
+        resolve_backend_name()
+
+
+def test_cluster_env_selection(monkeypatch):
+    monkeypatch.setenv("REPRO_COMM", "socket")
+    c = LocalCluster(2)
+    try:
+        assert c.comm_backend == "socket"
+        data = _payload(100_000)
+        c.put(0, "e", data)
+        np.testing.assert_array_equal(c.get(1, "e", timeout=30.0), data)
+    finally:
+        c.shutdown()
+
+
+def test_backoff_delay_deterministic_and_capped():
+    a = [backoff_delay(3, 0, 1, k, 0.05, 1.0) for k in range(8)]
+    b = [backoff_delay(3, 0, 1, k, 0.05, 1.0) for k in range(8)]
+    assert a == b  # pure in (seed, src, dst, attempt)
+    assert a != [backoff_delay(4, 0, 1, k, 0.05, 1.0) for k in range(8)]
+    for k, d in enumerate(a):
+        base = min(1.0, 0.05 * 2 ** k)
+        assert 0.5 * base <= d < 1.5 * base  # jitter in [0.5, 1.5)
+
+
+# -- framing edge cases on both backends ---------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_zero_byte_object(backend):
+    c = LocalCluster(2, comm_backend=backend)
+    try:
+        c.put(0, "z", np.empty(0, dtype=np.uint8))
+        got = c.get(1, "z", timeout=30.0)
+        assert got.size == 0
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_non_chunk_aligned_tail(backend):
+    # Size chosen well past the inline threshold and NOT a multiple of
+    # the chunk size: the last frame is a short tail.
+    c = LocalCluster(3, comm_backend=backend, chunk_size=4096)
+    try:
+        data = _payload(64 * 1024 + 4096 + 37)
+        c.put(0, "t", data)
+        np.testing.assert_array_equal(c.get(1, "t", timeout=30.0), data)
+        np.testing.assert_array_equal(c.get(2, "t", timeout=30.0), data)
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_collectives_byte_identical_across_backends(backend):
+    c = LocalCluster(4, comm_backend=backend)
+    try:
+        parts = []
+        for n in range(4):
+            a = np.arange(20_000, dtype=np.float64) * (n + 1)
+            c.put(n, f"p{n}", a)
+            parts.append(a)
+        expect = sum(parts)
+        c.reduce(0, "sum", [f"p{n}" for n in range(4)])
+        np.testing.assert_array_equal(c.get(0, "sum", timeout=30.0), expect)
+        c.allreduce(list(range(4)), "ar", [f"p{n}" for n in range(4)])
+        for n in range(4):
+            np.testing.assert_array_equal(c.get(n, "ar", timeout=30.0), expect)
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_receiver_death_mid_frame_releases_sender_slot(backend):
+    """Receiver dies with a frame half-delivered: the sender's outbound
+    slot must come back (release_source ran) and select_source keeps
+    serving other receivers -- no wedged accounting."""
+    c = LocalCluster(3, comm_backend=backend, pace=0.002, chunk_size=4096)
+    try:
+        data = _payload(256 * 1024)
+        c.put(0, "w", data)
+        fut = c.get_async(1, "w", timeout=10.0)
+        time.sleep(0.03)  # mid-stream
+        c.fail_node(1)
+        with pytest.raises(BaseException):
+            fut.result(timeout=10.0)
+        deadline = time.time() + 5.0
+        while time.time() < deadline and c.directory.outbound_load(0) != 0:
+            time.sleep(0.01)
+        assert c.directory.outbound_load(0) == 0
+        # The source still serves a fresh receiver end to end.
+        np.testing.assert_array_equal(c.get(2, "w", timeout=30.0), data)
+        assert c.directory.outbound_load(0) == 0
+    finally:
+        c.shutdown()
+
+
+# -- injected connection faults ------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mid_stream_reset_resumes_from_watermark(backend):
+    """ConnFault('reset') tears the stream down mid-flight: the receiver
+    backoff-reconnects, resumes from its watermark, and the delivered
+    bytes are identical.  Trace reconnect instants == stats counter."""
+    plan = FaultPlan(seed=5, conn_faults=[
+        ConnFault(kind="reset", src=0, dst=1, reset_after=3),
+    ])
+    c = LocalCluster(
+        2, comm_backend=backend, chunk_size=4096, faults=plan, trace=True,
+        fault_tolerance=FaultToleranceConfig(
+            connect_backoff_base_s=0.01, connect_backoff_cap_s=0.05,
+        ),
+    )
+    try:
+        data = _payload(512 * 1024, seed=11)
+        c.put(0, "r", data)
+        t0 = time.time()
+        got = c.get(1, "r", timeout=30.0)
+        assert time.time() - t0 < 30.0  # zero hangs
+        np.testing.assert_array_equal(got, data)
+        assert c.stats["comm_reconnects"] >= 1
+        assert len(_comm_instants(c, "reconnect")) == c.stats["comm_reconnects"]
+    finally:
+        c.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_connect_drop_window_retries_then_succeeds(backend):
+    """A drop window refuses early connection attempts; capped backoff
+    rides past the window and the transfer completes byte-identical."""
+    plan = FaultPlan(seed=9, conn_faults=[
+        ConnFault(kind="drop", src=0, dst=1, start=0.0, end=0.25),
+    ])
+    inj = FaultInjector(plan)
+    c = LocalCluster(
+        2, comm_backend=backend, faults=inj, trace=True,
+        fault_tolerance=FaultToleranceConfig(
+            connect_retries=8,
+            connect_backoff_base_s=0.05, connect_backoff_cap_s=0.5,
+        ),
+    )
+    try:
+        data = _payload(128 * 1024, seed=3)
+        c.put(0, "d", data)
+        inj.start(c)  # drop window [0, 0.25) opens NOW
+        np.testing.assert_array_equal(c.get(1, "d", timeout=30.0), data)
+        assert c.stats["connect_retries"] >= 1
+        assert len(_comm_instants(c, "connect-retry")) == c.stats["connect_retries"]
+    finally:
+        c.shutdown()
+
+
+def test_conn_fault_draws_are_deterministic():
+    plan = FaultPlan(seed=21, conn_faults=[
+        ConnFault(kind="drop", p=0.5),
+        ConnFault(kind="delay", delay_s=0.01, p=0.5),
+    ])
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+    draws_a = [a.connect_fault(0, 1, k) for k in range(16)]
+    draws_b = [b.connect_fault(0, 1, k) for k in range(16)]
+    assert draws_a == draws_b
+    assert any(d for d, _ in draws_a) and not all(d for d, _ in draws_a)
+    r_a = [a.reset_window(0, 1, k) for k in range(8)]
+    assert r_a == [b.reset_window(0, 1, k) for k in range(8)]
+
+
+# -- heartbeat liveness (socket backend) ---------------------------------
+
+
+def test_heartbeat_detects_silent_peer_death():
+    """Silently kill a node's endpoint (no FIN to the cluster's control
+    plane): the heartbeat monitor must detect it within
+    ``heartbeat_timeout``, count it, trace it, and feed fail_node."""
+    ft = FaultToleranceConfig(heartbeat_interval_s=0.05, heartbeat_timeout=0.4)
+    c = LocalCluster(3, comm_backend="socket", fault_tolerance=ft, trace=True)
+    try:
+        data = _payload(32 * 1024)
+        c.put(0, "h", data)
+        np.testing.assert_array_equal(c.get(1, "h", timeout=30.0), data)
+        t0 = time.time()
+        c._comm.silence_node(2)
+        deadline = t0 + ft.heartbeat_timeout + 2.0
+        while time.time() < deadline and 2 not in c.dead:
+            time.sleep(0.01)
+        detected = time.time() - t0
+        assert 2 in c.dead, "silent death never detected"
+        assert detected <= ft.heartbeat_timeout + 2.0
+        assert c.stats["heartbeat_misses"] >= 1
+        assert len(_comm_instants(c, "heartbeat-miss")) == c.stats["heartbeat_misses"]
+        # Survivors keep serving.
+        np.testing.assert_array_equal(c.get(1, "h", timeout=30.0), data)
+    finally:
+        c.shutdown()
+
+
+def test_heartbeat_does_not_kill_healthy_peers():
+    ft = FaultToleranceConfig(heartbeat_interval_s=0.05, heartbeat_timeout=0.3)
+    c = LocalCluster(3, comm_backend="socket", fault_tolerance=ft)
+    try:
+        time.sleep(1.0)  # several full heartbeat rounds
+        assert not c.dead
+        assert c.stats["heartbeat_misses"] == 0
+    finally:
+        c.shutdown()
+
+
+# -- chaos soak: seeded reset storm on the socket backend ----------------
+
+
+def test_socket_chaos_soak_resets_and_broadcast():
+    """Seeded soak: every 0->* stream resets after a few windows while a
+    4-node broadcast runs; everything reconnects, resumes and delivers
+    byte-identical payloads with zero hangs."""
+    plan = FaultPlan(seed=13, conn_faults=[
+        ConnFault(kind="reset", src=0, reset_after=2, p=0.8),
+    ])
+    c = LocalCluster(
+        4, comm_backend="socket", chunk_size=4096, faults=plan, trace=True,
+        fault_tolerance=FaultToleranceConfig(
+            connect_backoff_base_s=0.01, connect_backoff_cap_s=0.05,
+        ),
+    )
+    try:
+        data = _payload(256 * 1024, seed=17)
+        c.put(0, "soak", data)
+        futs = [c.get_async(n, "soak", timeout=30.0) for n in (1, 2, 3)]
+        for f in futs:
+            np.testing.assert_array_equal(f.result(timeout=30.0), data)
+        assert len(_comm_instants(c, "reconnect")) == c.stats["comm_reconnects"]
+    finally:
+        c.shutdown()

@@ -75,3 +75,62 @@ def test_cluster_delete_then_reput_same_id():
     c.delete("v")
     c.put(0, "v", np.full(4, 2.0))  # revive: explicit re-Put of the id
     np.testing.assert_array_equal(c.get(1, "v"), np.full(4, 2.0))
+
+
+def test_replicated_failover_under_publish_storm():
+    """ISSUE 10 satellite: kill the primary in the middle of a concurrent
+    publish storm.  The promoted replica must serve identical locations
+    and sizes for everything fully published before the failover, absorb
+    the storm's remaining mutations, and keep firing subscribers."""
+    d = ReplicatedDirectory(num_shards=8, num_replicas=1)
+    lock = threading.Lock()  # the cluster's _dir_lock discipline
+    n_threads, per_thread = 4, 60
+    published = set()
+    half_done = threading.Event()
+    fired = []
+
+    def storm(t):
+        for k in range(per_thread):
+            oid = f"storm-{t}-{k}"
+            with lock:
+                d.publish_partial(oid, node=t, size=8 * (k + 1))
+                d.publish_complete(oid, node=t, size=8 * (k + 1))
+                published.add(oid)
+                if len(published) >= (n_threads * per_thread) // 2:
+                    half_done.set()
+            time.sleep(0)
+
+    # Waiters subscribed BEFORE the failover must keep receiving events
+    # AFTER it (fail_primary carries subscriber tables across).
+    late_ids = [f"storm-{t}-{per_thread - 1}" for t in range(n_threads)]
+    for oid in late_ids:
+        d.subscribe(oid, fired.append)
+
+    threads = [threading.Thread(target=storm, args=(t,)) for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    assert half_done.wait(timeout=30.0)
+    with lock:
+        snapshot = {
+            oid: (sorted(l.node for l in d.locations(oid)), d.size_of(oid))
+            for oid in published
+        }
+        d.fail_primary()
+        # Promoted replica serves the pre-failover state identically.
+        for oid, (nodes, size) in snapshot.items():
+            assert sorted(l.node for l in d.locations(oid)) == nodes
+            assert d.size_of(oid) == size
+    for th in threads:
+        th.join(timeout=30.0)
+        assert not th.is_alive()
+
+    # Every object from the storm -- before and after the kill -- is served.
+    for t in range(n_threads):
+        for k in range(per_thread):
+            oid = f"storm-{t}-{k}"
+            locs = d.locations(oid)
+            assert [l.node for l in locs] == [t], oid
+            assert d.size_of(oid) == 8 * (k + 1)
+    # Subscribers fired for publishes that landed after the promotion
+    # (publish_partial and publish_complete each notify, so dedupe).
+    assert set(fired) == set(late_ids)

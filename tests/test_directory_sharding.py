@@ -1,0 +1,76 @@
+"""Stable directory sharding (ISSUE 10 satellite).
+
+``ObjectDirectory`` used the builtin ``hash`` for id -> shard routing,
+which is PYTHONHASHSEED-randomized: two processes (transport peers, a
+restarted directory) would disagree on which shard owns an object, and
+``ReplicatedDirectory.fail_primary`` -- which carries subscriber tables
+across shards *positionally* -- would wire waiters to the wrong shard.
+The routing is now ``zlib.crc32``, deterministic everywhere.  This test
+locks that in by comparing the mapping across subprocesses launched with
+different hash seeds."""
+
+import json
+import os
+import subprocess
+import sys
+import zlib
+
+from repro.core.directory import ObjectDirectory, ReplicatedDirectory
+
+_IDS = [
+    "x", "obj-0", "obj-1", "grad:layer3:step12", "bcast/9",
+    "", "ünicøde-id", "a" * 300, "reduce~tmp~7~partial",
+]
+
+_CHILD = r"""
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.core.directory import ObjectDirectory
+d = ObjectDirectory(num_shards=8)
+ids = json.loads(sys.argv[1])
+print(json.dumps([d.shard_index(i) for i in ids]))
+"""
+
+
+def _mapping_under_hashseed(seed: str):
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ, PYTHONHASHSEED=seed, PYTHONPATH=os.path.abspath(src))
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD.format(src=os.path.abspath(src)),
+         json.dumps(_IDS)],
+        env=env, capture_output=True, text=True, check=True, timeout=60,
+    )
+    return json.loads(out.stdout)
+
+
+def test_shard_index_stable_across_hash_seeds():
+    a = _mapping_under_hashseed("0")
+    b = _mapping_under_hashseed("12345")
+    c = _mapping_under_hashseed("random")
+    assert a == b == c
+    # And it matches the documented crc32 routing in-process.
+    d = ObjectDirectory(num_shards=8)
+    assert a == [zlib.crc32(i.encode("utf-8")) % 8 for i in _IDS]
+    assert a == [d.shard_index(i) for i in _IDS]
+
+
+def test_shard_index_routes_shard_lookups():
+    d = ObjectDirectory(num_shards=8)
+    for i in _IDS:
+        d.publish_complete(i or "empty", node=0, size=4)
+    for i in _IDS:
+        oid = i or "empty"
+        shard = d.shards[d.shard_index(oid)]
+        assert oid in shard.size
+
+
+def test_replicated_failover_same_shard_for_subscribers():
+    """fail_primary carries subscriber tables positionally: only sound if
+    primary and promoted replica agree on id -> shard."""
+    d = ReplicatedDirectory(num_shards=8, num_replicas=1)
+    fired = []
+    d.publish_partial("obj-0", node=0, size=16)
+    d.subscribe("obj-0", fired.append)
+    d.fail_primary()
+    d.publish_complete("obj-0", node=1, size=16)
+    assert "obj-0" in fired
